@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing: datasets, timing, CSV emission.
+
+CPU-scale analogs of the paper's datasets (Table III): the paper's own
+argument is that build time scales linearly in dataset size (§VI), so all
+size-dependent claims are validated as *trends/ratios* at 10³–10⁴ vectors.
+``FAST=1`` (env ``REPRO_BENCH_FAST``) shrinks everything for smoke runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+from repro.data.synthetic import Dataset, make_clustered
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def scale(n: int) -> int:
+    return max(n // 8, 256) if FAST else n
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str) -> Dataset:
+    """CPU-scale analogs keyed by the paper dataset they stand in for."""
+    specs = {
+        # low-dim uint8 (Sift analog)
+        "sift_analog": dict(n=scale(6000), d=32, dtype="uint8"),
+        # mid-dim float (Deep/MSTuring analog)
+        "deep_analog": dict(n=scale(6000), d=64, dtype="float32"),
+        # high-dim float (Laion analog — drives the dim/dtype trends)
+        "laion_analog": dict(n=scale(6000), d=192, dtype="float32"),
+        # small sets for the slow CPU Vamana baselines
+        "sift_small": dict(n=scale(2000), d=32, dtype="uint8"),
+        "laion_small": dict(n=scale(2000), d=192, dtype="float32"),
+    }
+    kw = specs[name]
+    return make_clustered(
+        kw["n"], kw["d"], dtype=kw["dtype"], n_queries=30, spread=1.0,
+        seed=13, name=name,
+    )
+
+
+class Rows:
+    """Collects (benchmark, key, value) rows; printed as CSV by run.py."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple[str, str]] = []
+
+    def add(self, key: str, value) -> None:
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        self.rows.append((key, str(value)))
+        print(f"{self.name},{key},{value}", flush=True)
+
+    def section(self, title: str) -> None:
+        print(f"# --- {self.name}: {title} ---", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,15 @@
+"""ScaleGANN core — the paper's contribution (partition / build / merge /
+search / spot scheduling / cost), in JAX + numpy orchestration."""
+
+from repro.core.builder import (  # noqa: F401
+    build_diskann,
+    build_extended_cagra,
+    build_ggnn,
+    build_scalegann,
+)
+from repro.core.merge import GlobalIndex, merge_shard_indexes  # noqa: F401
+from repro.core.search import search_index, split_search  # noqa: F401
+
+# NOTE: `repro.core.partition` (module) intentionally not re-exported as a
+# function here — it would shadow the submodule name.  Use
+# ``from repro.core.partition import partition``.

@@ -1,0 +1,197 @@
+"""End-to-end index construction drivers for all four compared systems
+(paper §VI): ScaleGANN, DiskANN, Extended CAGRA, GGNN.
+
+Each driver returns a :class:`BuildResult` with the paper's two timing
+metrics — **overall** (partition + shard build + merge) and **build-only**
+(shard indexing only) — plus per-shard build times that feed the
+multi-instance scheduler simulation (Table VII) and the cost model (§VI-C).
+
+Shard builds execute on a thread pool of ``n_workers`` — the software analog
+of "each available GPU instance is assigned an independent shard-level
+indexing task" (no inter-worker communication, §IV).  Wall-clock numbers on
+this CPU container are *relative* (the paper's conclusions are all ratios).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.configs.base import IndexConfig
+from repro.core import cagra, vamana
+from repro.core.merge import GlobalIndex, merge_shard_indexes
+from repro.core.partition import PartitionResult, Shard, partition
+
+BUILDERS = {
+    "cagra": cagra.build_shard_index,
+    "vamana": vamana.build_shard_index_vamana,
+}
+
+
+@dataclasses.dataclass
+class BuildResult:
+    name: str
+    index: GlobalIndex | None  # merged systems only
+    shards: list[Shard]
+    shard_graphs: list[np.ndarray]
+    partition_s: float
+    build_only_s: float  # Σ shard build time (1-worker equivalent)
+    wall_build_s: float  # elapsed with n_workers
+    merge_s: float
+    per_shard_s: list[float]
+    n_distance_computations: int
+    stats: dict
+
+    @property
+    def overall_s(self) -> float:
+        return self.partition_s + self.wall_build_s + self.merge_s
+
+
+def _build_shards(
+    data: np.ndarray,
+    shards: list[Shard],
+    cfg: IndexConfig,
+    *,
+    algo: str = "cagra",
+    n_workers: int = 1,
+):
+    build = BUILDERS[algo]
+    per_shard_s = [0.0] * len(shards)
+    results: list = [None] * len(shards)
+
+    def one(i: int):
+        t0 = time.perf_counter()
+        vecs = np.asarray(data[shards[i].ids])
+        results[i] = build(vecs, cfg)
+        per_shard_s[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if n_workers <= 1:
+        for i in range(len(shards)):
+            one(i)
+    else:
+        with ThreadPoolExecutor(max_workers=n_workers) as pool:
+            list(pool.map(one, range(len(shards))))
+    wall = time.perf_counter() - t0
+    return results, per_shard_s, wall
+
+
+def build_scalegann(
+    data: np.ndarray,
+    cfg: IndexConfig,
+    *,
+    algo: str = "cagra",
+    n_workers: int = 1,
+    selective: bool = True,
+) -> BuildResult:
+    """The paper's system: selective-replication partition → parallel shard
+    builds → edge-union merge.  ``selective=False`` gives DiskANN's uniform
+    replication (Table IV 'Original')."""
+    t0 = time.perf_counter()
+    part: PartitionResult = partition(data, cfg, selective=selective)
+    partition_s = time.perf_counter() - t0
+
+    idxs, per_shard_s, wall = _build_shards(
+        data, part.shards, cfg, algo=algo, n_workers=n_workers
+    )
+
+    t0 = time.perf_counter()
+    merged = merge_shard_indexes(
+        part.shards, idxs, len(data), cfg.degree, data=data
+    )
+    merge_s = time.perf_counter() - t0
+    return BuildResult(
+        name=f"scalegann[{algo}]",
+        index=merged,
+        shards=part.shards,
+        shard_graphs=[i.graph for i in idxs],
+        partition_s=partition_s,
+        build_only_s=sum(per_shard_s),
+        wall_build_s=wall,
+        merge_s=merge_s,
+        per_shard_s=per_shard_s,
+        n_distance_computations=sum(i.n_distance_computations for i in idxs),
+        stats=dict(part.stats),
+    )
+
+
+def build_diskann(
+    data: np.ndarray, cfg: IndexConfig, *, n_workers: int = 1
+) -> BuildResult:
+    """DiskANN baseline: uniform ≥1 replication + Vamana shard builds + merge
+    (CPU algorithm end-to-end)."""
+    res = build_scalegann(
+        data, cfg, algo="vamana", n_workers=n_workers, selective=False
+    )
+    return dataclasses.replace(res, name="diskann")
+
+
+def _split_partition(
+    data: np.ndarray, cfg: IndexConfig, *, kmeans: bool
+) -> tuple[list[Shard], float]:
+    """Replication-free split: k-means shards (Extended CAGRA) or contiguous
+    blocks (GGNN's naive split)."""
+    t0 = time.perf_counter()
+    n = len(data)
+    if kmeans:
+        part = partition(
+            data,
+            dataclasses.replace(cfg, omega=1),  # originals only
+            selective=True,
+        )
+        shards = part.shards
+    else:
+        per = -(-n // cfg.n_clusters)
+        shards = [
+            Shard(
+                ids=np.arange(s, min(s + per, n), dtype=np.int64),
+                is_replica=np.zeros(min(per, n - s), bool),
+            )
+            for s in range(0, n, per)
+        ]
+    return shards, time.perf_counter() - t0
+
+
+def build_split_only(
+    data: np.ndarray,
+    cfg: IndexConfig,
+    *,
+    name: str,
+    kmeans_split: bool,
+    n_workers: int = 1,
+) -> BuildResult:
+    """Extended CAGRA (kmeans_split=True) / GGNN (False): no replication, no
+    merge; queries must search every shard (core.search.split_search)."""
+    shards, partition_s = _split_partition(data, cfg, kmeans=kmeans_split)
+    idxs, per_shard_s, wall = _build_shards(
+        data, shards, cfg, algo="cagra", n_workers=n_workers
+    )
+    return BuildResult(
+        name=name,
+        index=None,
+        shards=shards,
+        shard_graphs=[i.graph for i in idxs],
+        partition_s=partition_s,
+        build_only_s=sum(per_shard_s),
+        wall_build_s=wall,
+        merge_s=0.0,
+        per_shard_s=per_shard_s,
+        n_distance_computations=sum(i.n_distance_computations for i in idxs),
+        stats={"n": len(data), "replica_proportion": 0.0},
+    )
+
+
+def build_extended_cagra(data, cfg, *, n_workers: int = 1) -> BuildResult:
+    return build_split_only(
+        data, cfg, name="extended_cagra", kmeans_split=True,
+        n_workers=n_workers,
+    )
+
+
+def build_ggnn(data, cfg, *, n_workers: int = 1) -> BuildResult:
+    return build_split_only(
+        data, cfg, name="ggnn", kmeans_split=False, n_workers=n_workers
+    )

@@ -1,0 +1,190 @@
+"""Shard-index merge into one global graph (paper §IV step 3, §V-C).
+
+Replicated vectors appear in multiple shards; their per-shard neighbor lists
+are *unioned* (DiskANN's merge) and the result is degree-capped to R keeping
+the closest neighbors.  The merge is the only stage that touches every shard
+index, so it is written as a streaming pass over (graph, manifest) pairs:
+
+  * **Order invariance** — parallel assignment makes intra-shard vector order
+    non-deterministic (§V-C).  DiskANN's sequential-read merge breaks there;
+    the paper adds a disk *buffer-state check*.  We reproduce the property
+    with explicit (local → global) manifests: every edge is translated
+    through the manifest, so merge output is a pure function of the edge
+    *set*, never of row order.  ``tests/test_merge.py`` asserts permutation
+    invariance.
+  * **Buffered sequential reads** — ``BufferedShardReader`` mirrors the
+    paper's buffered disk path: rows are fetched through a block buffer; a
+    *state check* detects when the requested global id is outside the
+    buffered window and refills (random access degenerates gracefully,
+    sequential access hits the buffer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cagra import ShardIndex
+from repro.core.partition import Shard
+
+
+@dataclasses.dataclass
+class GlobalIndex:
+    """Merged graph over the full dataset, global coordinates, -1 padded."""
+
+    graph: np.ndarray  # [N, R] int32
+    medoid: int  # DiskANN-style single entry point
+    n_vectors: int
+
+    def entry_points(self, n: int = 16) -> np.ndarray:
+        """Medoid + a stratified sample — CAGRA-style multi-entry seeds (a
+        merged kNN graph has only local edges; multiple entries restore
+        navigability; deterministic so serving replicas agree)."""
+        extra = np.linspace(0, self.n_vectors - 1, n, dtype=np.int64)
+        return np.unique(np.concatenate([[self.medoid], extra]))
+
+    @property
+    def degree(self) -> int:
+        return self.graph.shape[1]
+
+    def out_degrees(self) -> np.ndarray:
+        return (self.graph >= 0).sum(axis=1)
+
+
+class BufferedShardReader:
+    """Sequential-friendly buffered reader with the paper's state check.
+
+    Wraps a [n, D] shard-data array (or memmap).  ``get(local_id)`` serves
+    from an in-memory block buffer; if the id misses the buffered window
+    (out-of-order read), the buffer is refilled — correctness is preserved
+    for *any* order, efficiency for sorted order.  ``hits``/``misses``
+    expose buffer efficiency to the tests/benchmarks.
+    """
+
+    def __init__(self, rows: np.ndarray, buffer_rows: int = 4096):
+        self._rows = rows
+        self._buf_rows = int(buffer_rows)
+        self._lo = 0
+        self._hi = 0
+        self._buf: np.ndarray | None = None
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, local_id: int) -> np.ndarray:
+        # --- buffer state check (paper §V-C) ---
+        if self._buf is None or not (self._lo <= local_id < self._hi):
+            self.misses += 1
+            self._lo = local_id
+            self._hi = min(local_id + self._buf_rows, len(self._rows))
+            self._buf = np.asarray(self._rows[self._lo : self._hi])
+        else:
+            self.hits += 1
+        return self._buf[local_id - self._lo]
+
+
+def _translate(graph: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Local neighbor ids -> global ids; -1 stays -1."""
+    safe = np.maximum(graph, 0)
+    out = ids[safe].astype(np.int64)
+    out[graph < 0] = -1
+    return out
+
+
+def merge_shard_indexes(
+    shards: list[Shard],
+    indexes: list[ShardIndex],
+    n_total: int,
+    degree: int,
+    *,
+    data: np.ndarray | None = None,
+    centroid_of: np.ndarray | None = None,
+) -> GlobalIndex:
+    """Edge-union merge with degree cap.
+
+    For each global vector, collect the union of its neighbor lists over all
+    shards containing it.  Cap at ``degree``: if ``data`` is given, keep the
+    *closest* neighbors (distance-ordered, DiskANN behavior); otherwise keep
+    shard order (replicas append after originals).
+
+    ``centroid_of`` ([N] shard id of the original assignment) is only used
+    for the medoid choice; the medoid is the vector closest to the global
+    mean when ``data`` is given, else vector 0.
+    """
+    if len(shards) != len(indexes):
+        raise ValueError("shards and indexes must align")
+    # Pass 1: count edges per global id to presize the union buffers.
+    counts = np.zeros(n_total, np.int64)
+    for shard, idx in zip(shards, indexes):
+        valid = (idx.graph >= 0).sum(axis=1)
+        np.add.at(counts, shard.ids, valid)
+    slots = np.maximum(counts, 1)
+    offsets = np.zeros(n_total + 1, np.int64)
+    np.cumsum(slots, out=offsets[1:])
+    edge_buf = np.full(offsets[-1], -1, np.int64)
+    fill = np.zeros(n_total, np.int64)
+
+    # Pass 2: translate + scatter each shard's edges (order-free).
+    for shard, idx in zip(shards, indexes):
+        g = _translate(idx.graph, shard.ids)  # [n, R] global
+        for row, gid in enumerate(shard.ids):
+            nbrs = g[row]
+            nbrs = nbrs[nbrs >= 0]
+            s = offsets[gid] + fill[gid]
+            edge_buf[s : s + len(nbrs)] = nbrs
+            fill[gid] += len(nbrs)
+
+    # Pass 3: dedup + cap per vector.
+    graph = np.full((n_total, degree), -1, np.int32)
+    for gid in range(n_total):
+        nbrs = edge_buf[offsets[gid] : offsets[gid] + fill[gid]]
+        nbrs = nbrs[(nbrs >= 0) & (nbrs != gid)]
+        if nbrs.size == 0:
+            continue
+        # stable unique preserving first-seen order
+        uniq, first = np.unique(nbrs, return_index=True)
+        uniq = uniq[np.argsort(first, kind="stable")]
+        if uniq.size > degree:
+            if data is not None:
+                v = np.asarray(data[gid], np.float32)
+                cand = np.asarray(data[uniq], np.float32)
+                d = ((cand - v) ** 2).sum(axis=1)
+                uniq = uniq[np.argsort(d, kind="stable")[:degree]]
+            else:
+                uniq = uniq[:degree]
+        graph[gid, : uniq.size] = uniq
+
+    medoid = 0
+    if data is not None:
+        sample = np.asarray(
+            data[np.linspace(0, n_total - 1, min(n_total, 8192)).astype(int)],
+            np.float32,
+        )
+        mean = sample.mean(axis=0)
+        probe_ids = np.linspace(0, n_total - 1, min(n_total, 8192)).astype(int)
+        probe = np.asarray(data[probe_ids], np.float32)
+        medoid = int(probe_ids[((probe - mean) ** 2).sum(axis=1).argmin()])
+    return GlobalIndex(graph=graph, medoid=medoid, n_vectors=n_total)
+
+
+def connectivity_stats(index: GlobalIndex, *, sample: int = 2048, seed: int = 0):
+    """BFS reachability from the medoid over a sampled frontier — the merge's
+    raison d'être is global connectivity (§IV), so we measure it."""
+    n = index.n_vectors
+    seen = np.zeros(n, bool)
+    frontier = [index.medoid]
+    seen[index.medoid] = True
+    while frontier:
+        nxt = index.graph[frontier].reshape(-1)
+        nxt = nxt[nxt >= 0]
+        nxt = np.unique(nxt)
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt.tolist()
+    degs = index.out_degrees()
+    return {
+        "reachable_fraction": float(seen.mean()),
+        "mean_degree": float(degs.mean()),
+        "min_degree": int(degs.min()),
+        "isolated": int((degs == 0).sum()),
+    }

@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (MaxText-style) for the 512-chip meshes.
+
+Every parameter/activation dim carries a *logical* axis name (declared in
+the ``P`` specs / activation constraints); this module maps them onto mesh
+axes with a **divisibility-checked** resolution: a rule's mesh axes are
+applied left-to-right, skipping axes already consumed by an earlier dim of
+the same tensor and dropping axes that do not divide the dim (GSPMD could
+pad, but un-padded layouts keep ``memory_analysis`` honest and avoid
+pathological halo exchanges — the phi3-medium 40-head case is handled by
+*dropping* the TP axis on attention and FSDP-sharding instead).
+
+Default placement:
+  * tensor-parallel (``model`` axis): mlp / heads / kv / vocab / experts
+  * FSDP (``pod`` + ``data``): embed dims of all weight matrices (ZeRO-3)
+  * batch dims: (``pod``, ``data``)
+  * decode KV caches: batch → data, kv-heads → model when divisible, else
+    cache_seq → model (sequence-sharded attention for the 500k cells)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.common import params as par
+from repro.common.params import P
+
+# logical axis -> tuple of candidate mesh axes (applied in order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # --- parameters ---
+    "embed": ("pod", "data"),  # ZeRO-3 / FSDP
+    "embed2": (),  # second embed dim of square weights: replicated
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    par.LAYER_AXIS: (),  # stacked layers never shard
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "seq": (),  # flipped to ("model",) by sequence-parallel rules
+    "seq_attn": ("model",),  # context-parallel attention (opt-in constrain)
+    "act_embed": (),
+    "act_mlp": ("model",),
+    "act_heads": ("model",),
+    "act_kv": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "capacity": (),
+    "dispatch": ("pod", "data"),  # MoE dispatch groups (local capacity)
+    # --- serving caches ---
+    "cache_batch": ("pod", "data"),
+    "cache_kv": ("model",),
+    "cache_seq": ("data", "model"),  # consumes whatever batch/kv left free
+}
+
+
+def seq_parallel_rules(rules: dict | None = None) -> dict:
+    """Sequence-parallel variant: long-context activations shard over model."""
+    r = dict(rules or DEFAULT_RULES)
+    r["seq"] = ("model",)
+    r["act_embed"] = ()
+    return r
+
+
+def resolve_spec(
+    axes: tuple, shape: tuple, mesh: Mesh, rules: dict | None = None
+) -> PartitionSpec:
+    """Logical axes + concrete shape → PartitionSpec (divisibility-checked)."""
+    rules = rules or DEFAULT_RULES
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            out.append(None)
+            continue
+        cand = [
+            a
+            for a in rules.get(name, ())
+            if a in axis_sizes and a not in used
+        ]
+        picked: list[str] = []
+        prod = 1
+        for a in cand:
+            if dim % (prod * axis_sizes[a]) == 0:
+                picked.append(a)
+                prod *= axis_sizes[a]
+            else:
+                break
+        for a in picked:
+            used.add(a)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def param_shardings(
+    spec_tree, mesh: Mesh, rules: dict | None = None
+):
+    """P-declaration tree → NamedSharding tree."""
+
+    def one(p: P):
+        return NamedSharding(mesh, resolve_spec(p.axes, p.shape, mesh, rules))
+
+    return par.tree_map_p(one, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Ctx:
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_CTX = threading.local()
+
+
+def _ctx() -> _Ctx:
+    if not hasattr(_CTX, "v"):
+        _CTX.v = _Ctx()
+    return _CTX.v
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: dict | None = None):
+    """Activate activation-sharding constraints (model code stays mesh-
+    agnostic; smoke tests run with no context and constraints no-op)."""
+    prev = _ctx().mesh, _ctx().rules
+    _ctx().mesh, _ctx().rules = mesh, rules or DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _ctx().mesh, _ctx().rules = prev
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; identity with no context."""
+    c = _ctx()
+    if c.mesh is None:
+        return x
+    spec = resolve_spec(tuple(axes), x.shape, c.mesh, c.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(c.mesh, spec)
+    )
+
+
+def batch_sharding(mesh: Mesh, shape: tuple, rules: dict | None = None
+                   ) -> NamedSharding:
+    """Sharding for [B, ...] host batches (batch → (pod, data)),
+    divisibility-checked (long_500k has global_batch=1 → replicated)."""
+    axes = ("batch",) + (None,) * (len(shape) - 1)
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))
+
+
+def shard_info(shardings) -> dict:
+    """Bytes-per-device style summary for EXPERIMENTS.md §Dry-run."""
+    leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    specs = {}
+    for s in leaves:
+        key = str(s.spec)
+        specs[key] = specs.get(key, 0) + 1
+    return specs

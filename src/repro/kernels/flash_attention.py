@@ -1,0 +1,231 @@
+"""Pallas TPU kernels: flash attention (prefill) and flash decode.
+
+Serving-side hot spots for the LM substrate (the index-build side of the
+paper never needs attention, but the assigned architectures do).  Both
+kernels use the standard online-softmax accumulation with VMEM scratch for
+the running (max, denom, acc) state; the KV panel walk is the innermost grid
+dimension so state never leaves VMEM.
+
+Forward-only by design: training uses the differentiable chunked-jnp path in
+``ops.flash_attention_jnp`` (XLA fuses it well on TPU); these kernels serve
+prefill/decode where no gradient flows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 256
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, block_q, block_kv, seq_q, seq_kv,
+):
+    iq, jk = pl.program_id(2), pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    offset = seq_kv - seq_q  # query i attends keys <= i + offset
+    if causal:
+        needed = jk * block_kv <= iq * block_q + (block_q - 1) + offset
+    else:
+        needed = jnp.bool_(True)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bkv]
+        if causal:
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = jk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos + offset >= k_pos, s, _NEG_INF)
+        m_prev = m_ref[:, :1]  # [bq, 1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        out_ref[0, 0] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B,H,S,Dh], k/v: [B,Hkv,T,Dh] (H % Hkv == 0) → [B,H,S,Dh]."""
+    b, h, s, dh = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    group = h // hkv
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, t)
+    if s % block_q or t % block_kv:
+        raise ValueError("seq lengths must be divisible by block sizes")
+    scale = scale if scale is not None else dh**-0.5
+    grid = (b, h, s // block_q, t // block_kv)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_kv=block_kv,
+        seq_q=s,
+        seq_kv=t,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, dh),
+                lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, dh),
+                lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dh), lambda b_, h_, i, j: (b_, h_, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),  # running denom
+            pltpu.VMEM((block_q, dh), jnp.float32),  # running acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Flash decode: one query token against a long KV cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, len_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, scale, block_kv,
+):
+    jk = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_len = len_ref[0, 0]
+
+    @pl.when(jk * block_kv < valid_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [group, dh]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bkv, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [group, bkv]
+        k_pos = jk * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < valid_len, s, _NEG_INF)
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        out_ref[0, 0] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_kv", "interpret")
+)
+def flash_decode_pallas(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    scale: float | None = None,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B,H,Dh]; k/v cache: [B,Hkv,T,Dh]; cache_len: [B] → [B,H,Dh]."""
+    b, h, dh = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    block_kv = min(block_kv, t)
+    if t % block_kv:
+        raise ValueError("cache length must be divisible by block_kv")
+    scale = scale if scale is not None else dh**-0.5
+    qg = q.reshape(b, hkv, group, dh)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+    grid = (b, hkv, t // block_kv)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_kv=block_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, j: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, dh), lambda b_, h_, j: (b_, h_, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lens)
+    return out.reshape(b, h, dh)

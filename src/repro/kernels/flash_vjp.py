@@ -1,0 +1,191 @@
+"""Memory-efficient flash attention with a custom VJP (FlashAttention-2
+semantics, pure jnp).
+
+Why this exists (EXPERIMENTS.md §Perf iteration 1): differentiating the
+baseline scan-of-scan online-softmax attention makes JAX save the per-block
+probabilities as scan residuals — the compiled HLO materializes the full
+S×S attention matrix in f32 per layer per microbatch (measured: ~70% of all
+HBM bytes for the 4k-train cells).  FlashAttention-2's fix is algorithmic,
+not kernel-specific: save only (q, k, v, out, lse) and *recompute* each
+block's probabilities inside the backward from the logsumexp statistics.
+
+Forward residuals:  q, k, v (as given) + out + lse [B,Hkv,G,S] f32.
+Backward: one pass over kv chunks per q chunk;
+    p   = exp(q·kᵀ − lse)
+    dv += pᵀ·do
+    ds  = p ⊙ (do·vᵀ − Δ),   Δ = rowsum(do ⊙ out)
+    dq += ds·k,   dk += dsᵀ·q
+
+Layout matches ``ops.flash_attention_jnp``: q [B,H,S,Dh], k/v [B,Hkv,T,Dh],
+GQA via the [B,Hkv,G,…] grouping.  All block math in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _layout(q, k, v, q_chunk, kv_chunk):
+    b, h, s, dh = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    nq, nkv = s // q_chunk, t // kv_chunk
+    qs = q.reshape(b, hkv, g, nq, q_chunk, dh).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(b, hkv, nkv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, nkv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+    return qs, ks, vs, (b, h, hkv, g, s, t, dh, nq, nkv)
+
+
+def _fwd_impl(q, k, v, *, causal, scale, q_chunk, kv_chunk):
+    qs, ks, vs, (b, h, hkv, g, s, t, dh, nq, nkv) = _layout(
+        q, k, v, q_chunk, kv_chunk
+    )
+    offset = t - s
+
+    def q_step(_, iq_qc):
+        iq, qc = iq_qc
+        qf = qc.astype(jnp.float32) * scale
+
+        def kv_step(carry, jk_kv):
+            m_prev, l_prev, acc = carry
+            jk, kc, vc = jk_kv
+            sij = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                             kc.astype(jnp.float32))
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None] + offset
+                kpos = jk * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                sij = jnp.where(qpos >= kpos, sij, _NEG)
+            m_new = jnp.maximum(m_prev, sij.max(-1, keepdims=True))
+            p = jnp.exp(sij - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + p.sum(-1, keepdims=True)
+            # NOTE §Perf iteration 2 (refuted): computing p·V in bf16 was
+            # predicted to halve block bytes; the measured memory term got
+            # *worse* (+9%) — the CPU lowering materializes the f32↔bf16
+            # converts it cannot fuse.  Kept in f32 per measurement.
+            acc = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, hkv, g, q_chunk, 1), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init,
+                                          (jnp.arange(nkv), ks, vs))
+        out = acc / jnp.maximum(l_f, 1e-30)
+        lse = (m_f + jnp.log(jnp.maximum(l_f, 1e-30)))[..., 0]
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: [nq, b, hkv, g, qc, dh]; lse: [nq, b, hkv, g, qc]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, h, s, dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, s)
+    return out, lse
+
+
+def _bwd_impl(q, k, v, out, lse, dout, *, causal, scale, q_chunk, kv_chunk):
+    """Loop nest: OUTER over kv chunks, INNER over q chunks.
+
+    §Perf iteration 4: the first version (outer-q) threaded the full-size
+    dk/dv accumulators through the inner scan's xs/ys, which the compiler
+    must rebuild (copy) every outer iteration — measured as the largest
+    byte contributor after FA2.  With outer-kv, the inner carry is one
+    kv-chunk's (dk_j, dv_j) (small), dq accumulates by pure elementwise add
+    on the outer carry (aliasable in place), and dk/dv emerge as stacked
+    outer ys written exactly once.
+    """
+    qs, ks, vs, (b, h, hkv, g, s, t, dh, nq, nkv) = _layout(
+        q, k, v, q_chunk, kv_chunk
+    )
+    outs = out.reshape(b, hkv, g, nq, q_chunk, dh).transpose(3, 0, 1, 2, 4, 5)
+    dos = dout.reshape(b, hkv, g, nq, q_chunk, dh).transpose(
+        3, 0, 1, 2, 4, 5
+    )
+    lses = lse.reshape(b, hkv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    deltas = jnp.sum(
+        dos.astype(jnp.float32) * outs.astype(jnp.float32), axis=-1,
+        keepdims=True,
+    )  # [nq, b, hkv, g, qc, 1]
+    offset = t - s
+
+    def kv_step(dq_sum, xs):
+        jk, kc, vc = xs
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+
+        def q_step(carry, xs_q):
+            dk_j, dv_j = carry  # [b, hkv, kc, dh] — one kv chunk only
+            iq, qc, doc, lsec, delta = xs_q
+            qf = qc.astype(jnp.float32) * scale
+            dof = doc.astype(jnp.float32)
+            sij = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None] + offset
+                kpos = jk * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                sij = jnp.where(qpos >= kpos, sij, _NEG)
+            p = jnp.exp(sij - lsec[..., None])  # recomputed, never saved
+            dv_j = dv_j + jnp.einsum("bhgqk,bhgqd->bhkd", p, dof)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dof, vf)
+            ds = p * (dp - delta)
+            dq_blk = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf)
+            dk_j = dk_j + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+            return (dk_j, dv_j), dq_blk
+
+        zero = jnp.zeros((b, hkv, kv_chunk, dh), jnp.float32)
+        (dk_j, dv_j), dq_blocks = jax.lax.scan(
+            q_step, (zero, zero), (jnp.arange(nq), qs, dos, lses, deltas)
+        )
+        # dq accumulates elementwise on the outer carry — no slicing
+        return dq_sum + dq_blocks, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, b, hkv, g, q_chunk, dh), jnp.float32)
+    dqs, (dk, dv) = jax.lax.scan(kv_step, dq0, (jnp.arange(nkv), ks, vs))
+    dq = (dqs * scale).transpose(1, 2, 3, 0, 4, 5).reshape(
+        b, h, s, dh
+    ).astype(q.dtype)
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(b, hkv, t, dh).astype(k.dtype)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(b, hkv, t, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_vjp(q, k, v, causal, scale, q_chunk, kv_chunk):
+    out, _ = _fwd_impl(q, k, v, causal=causal, scale=scale,
+                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, scale, q_chunk, kv_chunk):
+    out, lse = _fwd_impl(q, k, v, causal=causal, scale=scale,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, scale, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _bwd_impl(q, k, v, out, lse, dout, causal=causal,
+                           scale=scale, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def flash_attention_fa2(q, k, v, *, causal=True, scale=None,
+                        q_chunk=512, kv_chunk=1024):
+    """Drop-in for ``ops.flash_attention_jnp`` with O(S) residuals."""
+    s, t, dh = q.shape[2], k.shape[2], q.shape[3]
+    scale = scale if scale is not None else dh ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    if s % q_chunk or t % kv_chunk:
+        raise ValueError("sequence lengths must divide the chunk sizes")
+    return flash_attention_vjp(q, k, v, causal, scale, q_chunk, kv_chunk)

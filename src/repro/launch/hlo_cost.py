@@ -1,0 +1,382 @@
+"""Loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, which
+under-reports FLOPs/bytes/collective-bytes by the trip count — fatal for a
+scan-structured trainer (layers × microbatches × attention chunks can be a
+10⁴× multiplier).  This module re-derives the three roofline inputs from
+``compiled.as_text()`` with loop multiplication:
+
+  * FLOPs    — dot ops: 2·|result|·K (K = contracted extent); transcendental
+               and elementwise ops: |result|; reduces: |operand|; fusions
+               recurse into the called computation.
+  * HBM bytes — per *materialized* op: result + operand bytes, with two
+               hardware-honest refinements: (a) ops inside a fusion are NOT
+               counted (fused intermediates never hit HBM) — the fusion op
+               itself counts its operands + result; (b) **slice-aware
+               operand accounting**: dynamic-slice / gather reads move only
+               the slice, and a fusion operand that is exclusively sliced
+               inside the fused computation is charged at the slice size —
+               without this, a scan that slices one row per iteration from
+               a large carried tensor would be charged the full tensor ×
+               trip-count (a ~100× over-count vs real HBM traffic).
+               dynamic-update-slice is charged 2× the update (in-place).
+  * Collective bytes — result bytes per op kind (all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute), multiplied
+               through enclosing loop trip counts.
+
+Trip counts come from the while op's ``backend_config known_trip_count``
+when present, else the max integer constant in the condition computation
+(scan conditions are ``lt(iv, N)``).
+
+This is a *model*, not ground truth — but it is consistent across cells and
+iterations, which is what the §Perf hillclimb needs, and it is validated
+against hand-computed FLOPs for dense train steps in
+``tests/test_roofline.py`` (within a few %).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"([a-z][\w\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.{0,8}?n.{0,5}?(\d+)')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "logistic",
+    "sine", "cosine", "exponential-minus-one", "log-plus-one", "erf",
+}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "is-finite", "convert", "iota",
+}
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "custom-call",
+}
+_COLLECTIVES = {
+    "all-gather": "all-gather",
+    "all-gather-start": "all-gather",
+    "all-reduce": "all-reduce",
+    "all-reduce-start": "all-reduce",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+}
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    shapes: list  # [(dtype, dims), ...] result shapes (tuple → many)
+    tail: str  # raw text after the opcode's '(' (operands + attrs)
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: {
+            "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+            "all-to-all": 0.0, "collective-permute": 0.0,
+        }
+    )
+    n_collectives: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "CostSummary":
+        return CostSummary(
+            flops=self.flops * k,
+            bytes=self.bytes * k,
+            collective_bytes={
+                n: v * k for n, v in self.collective_bytes.items()
+            },
+            n_collectives=int(self.n_collectives * k),
+        )
+
+    def add(self, other: "CostSummary") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for n, v in other.collective_bytes.items():
+            self.collective_bytes[n] += v
+        self.n_collectives += other.n_collectives
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(shapes) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4) for dt, dims in shapes
+    )
+
+
+def parse_module(text: str) -> dict[str, list[Op]]:
+    """HLO text → {computation name: [ops]}."""
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        if (
+            (line.startswith("%") or line.startswith("ENTRY"))
+            and line.rstrip().endswith("{")
+        ):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = []
+                comps[m.group(1)] = cur
+                continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if "/*" in line:  # strip `/*index=N*/` tuple comments (contain '=')
+            line = re.sub(r"/\*.*?\*/", "", line)
+        m = _OP_RE.match(line)
+        if m:
+            name, type_text, opcode, tail = m.groups()
+            shapes = _SHAPE_RE.findall(type_text)
+            cur.append(Op(name=name, opcode=opcode, shapes=shapes, tail=tail))
+    return comps
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        # symbol table: (comp, var) -> shapes
+        self.sym: dict[tuple[str, str], list] = {}
+        for cname, ops in self.comps.items():
+            for op in ops:
+                self.sym[(cname, op.name)] = op.shapes
+        self._memo: dict[str, CostSummary] = {}
+        self.entry = self._find_entry(text)
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_RE.match(line[len("ENTRY"):].strip())
+                if m:
+                    return m.group(1)
+        # fall back: last computation
+        return next(reversed(self.comps), "")
+
+    # -- trip counts --
+    def _trip_count(self, op: Op) -> int:
+        m = _TRIP_RE.search(op.tail)
+        if m:
+            return int(m.group(1))
+        mc = _COND_RE.search(op.tail)
+        if mc and mc.group(1) in self.comps:
+            consts = []
+            for cop in self.comps[mc.group(1)]:
+                consts += [int(x) for x in _CONST_RE.findall(
+                    cop.tail if cop.opcode != "constant" else
+                    cop.opcode + "(" + cop.tail
+                )]
+                if cop.opcode == "constant":
+                    mm = re.search(r"^\s*([\d]+)\)", cop.tail)
+                    if mm:
+                        consts.append(int(mm.group(1)))
+            # also scan raw constant lines
+            for cop in self.comps[mc.group(1)]:
+                if cop.opcode == "constant":
+                    mm = re.match(r"([\d]+)\)", cop.tail)
+                    if mm:
+                        consts.append(int(mm.group(1)))
+            if consts:
+                return max(consts)
+        return 1
+
+    def _operands(self, op: Op) -> list[str]:
+        # operands appear before the first "), " attr boundary
+        head = op.tail.split("), ")[0]
+        return _OPERAND_RE.findall(head)
+
+    def _operand_bytes(self, comp: str, op: Op) -> int:
+        total = 0
+        for name in self._operands(op):
+            shapes = self.sym.get((comp, name))
+            if shapes:
+                total += _shapes_bytes(shapes)
+        return total
+
+    def _fusion_operand_bytes(self, comp: str, op: Op, called: str) -> int:
+        """Operand bytes for a fusion, slice-aware: a parameter consumed
+        *only* by dynamic-slice/gather inside the fused computation is
+        charged at the slice-result size."""
+        ops_in = self.comps.get(called, [])
+        param_names = {}
+        for o in ops_in:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)\)", o.tail)
+                if m:
+                    param_names[int(m.group(1))] = o.name
+        # consumers per inner var name
+        consumers: dict[str, list[Op]] = {}
+        for o in ops_in:
+            for name in self._operands(o):
+                consumers.setdefault(name, []).append(o)
+        total = 0
+        for idx, operand in enumerate(self._operands(op)):
+            shapes = self.sym.get((comp, operand))
+            if not shapes:
+                continue
+            full = _shapes_bytes(shapes)
+            pname = param_names.get(idx)
+            cons = consumers.get(pname, []) if pname else []
+            if cons and all(c.opcode in ("dynamic-slice", "gather")
+                            for c in cons):
+                total += sum(_shapes_bytes(c.shapes) for c in cons)
+            else:
+                total += full
+        return total
+
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        result = _shape_elems(op.shapes[0][1]) if op.shapes else 0
+        k = 1
+        mc = _CONTRACT_RE.search(op.tail)
+        operands = _OPERAND_RE.findall(op.tail.split("), ")[0])
+        if mc and operands:
+            lhs_shapes = self.sym.get((comp, operands[0]))
+            if lhs_shapes:
+                dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+                for idx in mc.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        k *= dims[int(idx)]
+        return 2.0 * result * k
+
+    # -- main recursion --
+    def computation_cost(self, cname: str, *, in_fusion: bool = False
+                         ) -> CostSummary:
+        if not in_fusion and cname in self._memo:
+            return self._memo[cname]
+        total = CostSummary()
+        for op in self.comps.get(cname, []):
+            total.add(self.op_cost(cname, op, in_fusion=in_fusion))
+        if not in_fusion:
+            self._memo[cname] = total
+        return total
+
+    def op_cost(self, comp: str, op: Op, *, in_fusion: bool) -> CostSummary:
+        c = CostSummary()
+        oc = op.opcode
+        result_elems = sum(_shape_elems(d) for _, d in op.shapes)
+        result_bytes = _shapes_bytes(op.shapes)
+
+        if oc == "while":
+            mb, mcnd = _BODY_RE.search(op.tail), _COND_RE.search(op.tail)
+            trip = self._trip_count(op)
+            if mb and mb.group(1) in self.comps:
+                c.add(self.computation_cost(mb.group(1)).scaled(trip))
+            if mcnd and mcnd.group(1) in self.comps:
+                c.add(self.computation_cost(mcnd.group(1)).scaled(trip))
+            return c
+        if oc == "fusion":
+            mcall = _CALLS_RE.search(op.tail)
+            called = mcall.group(1) if mcall else None
+            if called and called in self.comps:
+                inner = self.computation_cost(called, in_fusion=True)
+                c.flops += inner.flops
+                # fused intermediates never hit HBM: count op boundary only
+                for n, v in inner.collective_bytes.items():
+                    c.collective_bytes[n] += v
+                c.n_collectives += inner.n_collectives
+            if not in_fusion:
+                opb = (self._fusion_operand_bytes(comp, op, called)
+                       if called and called in self.comps
+                       else self._operand_bytes(comp, op))
+                c.bytes += result_bytes + opb
+            return c
+        if oc in ("call", "conditional", "async-start"):
+            for sub in _OPERAND_RE.findall(op.tail):
+                if sub in self.comps and sub != comp:
+                    pass  # conservative: called comps handled via calls=
+            mcall = _CALLS_RE.search(op.tail)
+            if mcall and mcall.group(1) in self.comps:
+                c.add(self.computation_cost(mcall.group(1)))
+            return c
+        if oc in _COLLECTIVES:
+            kind = _COLLECTIVES[oc]
+            c.collective_bytes[kind] += result_bytes
+            c.n_collectives += 1
+            c.bytes += result_bytes
+            return c
+
+        if oc in ("dynamic-slice", "gather"):
+            # only the slice moves; charging the full operand would bill a
+            # per-iteration row read at the whole carried tensor
+            if not in_fusion:
+                c.bytes += 2 * result_bytes
+            return c
+        if oc == "dynamic-update-slice":
+            if not in_fusion:
+                ops_ = self._operands(op)
+                upd = (self.sym.get((comp, ops_[1]))
+                       if len(ops_) > 1 else None)
+                c.bytes += (2 * _shapes_bytes(upd) if upd
+                            else result_bytes)
+            return c
+
+        if oc == "dot":
+            c.flops += self._dot_flops(comp, op)
+        elif oc == "convolution":
+            c.flops += 2.0 * result_elems  # no convs in this framework
+        elif oc in ("reduce", "reduce-window"):
+            ob = self._operand_bytes(comp, op)
+            c.flops += ob / 4.0  # ~1 flop per input element
+        elif oc in _TRANSCENDENTAL:
+            c.flops += 4.0 * result_elems
+        elif oc in _ELEMENTWISE:
+            c.flops += float(result_elems)
+
+        if not in_fusion and oc not in _NO_BYTES:
+            c.bytes += result_bytes + self._operand_bytes(comp, op)
+        return c
+
+    def total(self) -> CostSummary:
+        return self.computation_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloCost(hlo_text).total()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": dict(cost.collective_bytes),
+        "total_collective_bytes": cost.total_collective_bytes,
+        "n_collectives": cost.n_collectives,
+    }

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device state — required because the dry-run
+must set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before*
+the first jax device query, while smoke tests/benches must keep seeing one
+device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips).
+
+    Axis semantics: ``pod`` is the DCN-crossing outer data axis (only
+    gradient/optimizer collectives traverse it); ``data`` is intra-pod
+    data/FSDP; ``model`` carries tensor/expert parallelism (per-layer
+    collectives stay on fast intra-pod ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist (1 on this container) — smoke/integration."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

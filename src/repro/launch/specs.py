@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct input stand-ins + sharding resolution per (arch × shape).
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input — the dry-run lowers against these, so a 1-CPU host can
+lower/compile 1T-parameter training steps without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models.model import Model, build_model
+
+VIT_DIM = 3200  # InternViT-6B hidden (frontend stub boundary)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything the dry-run needs for one (arch × shape) cell."""
+
+    model: Model
+    kind: str  # train | prefill | decode
+    batch_specs: dict  # name -> SDS (train/prefill)
+    cache_specs: Any = None  # decode only
+    token_specs: Any = None  # decode only: (tokens, pos)
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool
+                ) -> dict:
+    b = shape.global_batch
+    s = _text_len(cfg, shape.seq_len)
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        specs["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = _sds((b, cfg.n_patches, VIT_DIM),
+                                     jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model),
+                               jnp.bfloat16)
+    return specs
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeConfig) -> CellSpec:
+    model = build_model(cfg, max_seq_len=shape.seq_len)
+    if shape.kind == "train":
+        return CellSpec(
+            model=model, kind="train",
+            batch_specs=batch_specs(cfg, shape, with_labels=True),
+        )
+    if shape.kind == "prefill":
+        return CellSpec(
+            model=model, kind="prefill",
+            batch_specs=batch_specs(cfg, shape, with_labels=False),
+        )
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: model.init_cache_fn(b, shape.seq_len, jnp.bfloat16)
+    )
+    return CellSpec(
+        model=model, kind="decode",
+        batch_specs={},
+        cache_specs=cache,
+        token_specs=(_sds((b,), jnp.int32), _sds((), jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution for batches and caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(specs: dict, mesh, rules=None) -> dict:
+    return {
+        k: shd.batch_sharding(mesh, v.shape, rules) for k, v in specs.items()
+    }
+
+
+_CACHE_AXES = {
+    # leaf name -> logical axes for [B, ...] (leading block axis added below)
+    "k": ("cache_batch", "cache_kv", "cache_seq", None),
+    "v": ("cache_batch", "cache_kv", "cache_seq", None),
+    "conv": ("cache_batch", None, "act_mlp"),
+    "h": ("cache_batch", "act_mlp", None),
+    "tm_x": ("cache_batch", None),
+    "cm_x": ("cache_batch", None),
+    "s": ("cache_batch", "cache_kv", None, None),
+}
+
+
+def cache_shardings(cache_specs, mesh, rules=None):
+    def one(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        axes = _CACHE_AXES.get(name)
+        if axes is None:
+            return NamedSharding(mesh, PartitionSpec())
+        # caches carry a leading stacked-block axis
+        full_axes = (None, *axes) if leaf.ndim == len(axes) + 1 else axes
+        spec = shd.resolve_spec(full_axes, leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

@@ -1,0 +1,227 @@
+"""GQA attention (RoPE or learned-position), train/prefill/decode paths.
+
+The train path routes through ``kernels.ops.flash_attention_jnp`` (chunked
+online-softmax, differentiable, memory-safe at 32k context); serving paths
+route through ``kernels.ops.flash_attention`` / ``flash_decode`` which pick
+the Pallas kernels on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import P
+from repro.kernels import ops
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float  # 0.0 → no RoPE (learned positions upstream)
+    attn_chunk: int = 1024
+    bias: bool = False  # whisper-style projection biases
+    impl: str = "scan"  # scan (baseline) | fa2 (custom-VJP flash)
+    seq_shard: bool = False  # context-parallel q-seq sharding (§Perf)
+
+
+def attn_p(dims: AttnDims) -> dict:
+    h = dims.n_heads * dims.head_dim
+    kv = dims.n_kv_heads * dims.head_dim
+    p = {
+        "wq": P(shape=(dims.d_model, h), axes=("embed", "heads")),
+        "wk": P(shape=(dims.d_model, kv), axes=("embed", "kv")),
+        "wv": P(shape=(dims.d_model, kv), axes=("embed", "kv")),
+        "wo": P(shape=(h, dims.d_model), axes=("heads", "embed")),
+    }
+    if dims.bias:
+        p.update(
+            bq=P(shape=(h,), axes=("heads",), init="zeros"),
+            bv=P(shape=(kv,), axes=("kv",), init="zeros"),
+            bo=P(shape=(dims.d_model,), axes=("embed",), init="zeros"),
+        )
+    return p
+
+
+def _project_qkv(x, p, dims: AttnDims):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if dims.bias:
+        q = q + p["bq"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, dims.n_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, dims.n_kv_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, dims.n_kv_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _merge_heads(o, p, dims: AttnDims):
+    b, h, s, dh = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    if dims.bias:
+        out = out + p["bo"]
+    return out
+
+
+def _chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (whisper's 1500-frame encoder
+    is not 2^k-aligned)."""
+    for c in range(min(target, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def attn_forward(
+    x: jax.Array,
+    p: dict,
+    dims: AttnDims,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention. x: [B, S, D] → [B, S, D]."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, dims)
+    if dims.rope_theta > 0:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = layers.apply_rope(q, pos[:, None, :], dims.rope_theta)
+        k = layers.apply_rope(k, pos[:, None, :], dims.rope_theta)
+    if dims.seq_shard:
+        from repro.distributed import sharding as shd
+
+        q = shd.constrain(q, "batch", "act_heads", "seq_attn", None)
+        k = shd.constrain(k, "batch", "act_kv", None, None)
+        v = shd.constrain(v, "batch", "act_kv", None, None)
+    if dims.impl == "fa2":
+        from repro.kernels.flash_vjp import flash_attention_fa2
+
+        o = flash_attention_fa2(
+            q, k, v, causal=causal,
+            q_chunk=_chunk(s, 512), kv_chunk=_chunk(s, dims.attn_chunk),
+        )
+    else:
+        o = ops.flash_attention_jnp(
+            q, k, v, causal=causal,
+            q_chunk=_chunk(s, 512), kv_chunk=_chunk(s, dims.attn_chunk),
+        )
+    return _merge_heads(o, p, dims)
+
+
+def attn_prefill(
+    x: jax.Array, p: dict, dims: AttnDims, *, causal: bool = True
+) -> tuple[jax.Array, dict]:
+    """Prefill: full attention + return the KV cache {k, v: [B,Hkv,S,Dh]}."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, dims)
+    if dims.rope_theta > 0:
+        pos = jnp.arange(s)[None, None, :]
+        q = layers.apply_rope(q, pos, dims.rope_theta)
+        k = layers.apply_rope(k, pos, dims.rope_theta)
+    if dims.seq_shard:
+        from repro.distributed import sharding as shd
+
+        q = shd.constrain(q, "batch", "act_heads", "seq_attn", None)
+        k = shd.constrain(k, "batch", "act_kv", None, None)
+        v = shd.constrain(v, "batch", "act_kv", None, None)
+    o = ops.flash_attention(q, k, v, causal=causal)
+    return _merge_heads(o, p, dims), {"k": k, "v": v}
+
+
+def init_kv_cache(batch: int, max_len: int, dims: AttnDims, dtype) -> dict:
+    shape = (batch, dims.n_kv_heads, max_len, dims.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(
+    x: jax.Array,
+    p: dict,
+    cache: dict,
+    pos: jax.Array,  # scalar int32 — current cache length (static batching)
+    dims: AttnDims,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. x: [B, D]; cache k/v: [B, Hkv, T, Dh]."""
+    b, _ = x.shape
+    q = jnp.einsum("bd,dh->bh", x, p["wq"])
+    k = jnp.einsum("bd,dh->bh", x, p["wk"])
+    v = jnp.einsum("bd,dh->bh", x, p["wv"])
+    if dims.bias:
+        q = q + p["bq"]
+        v = v + p["bv"]
+    q = q.reshape(b, dims.n_heads, dims.head_dim)
+    k = k.reshape(b, dims.n_kv_heads, 1, dims.head_dim)
+    v = v.reshape(b, dims.n_kv_heads, 1, dims.head_dim)
+    if dims.rope_theta > 0:
+        pvec = jnp.full((b, dims.n_heads, 1), pos, jnp.int32)
+        q = layers.apply_rope(q[:, :, None, :], pvec, dims.rope_theta)[:, :, 0]
+        pkv = jnp.full((b, dims.n_kv_heads, 1), pos, jnp.int32)
+        k = layers.apply_rope(k, pkv, dims.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=2)
+    lens = jnp.full((b,), pos + 1, jnp.int32)
+    o = ops.flash_decode(q, k_cache, v_cache, lens)  # [B, H, Dh]
+    out = jnp.einsum("bh,hd->bd", o.reshape(b, -1), p["wo"])
+    if dims.bias:
+        out = out + p["bo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder): query from x, KV from encoder memory.
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_kv(memory: jax.Array, p: dict, dims: AttnDims) -> dict:
+    """Precompute the cross-attention KV cache from encoder output
+    ([B, F, D]) once per request."""
+    b, f, _ = memory.shape
+    k = jnp.einsum("bfd,dh->bfh", memory, p["wk"])
+    v = jnp.einsum("bfd,dh->bfh", memory, p["wv"])
+    if dims.bias:
+        v = v + p["bv"]
+    k = k.reshape(b, f, dims.n_kv_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, f, dims.n_kv_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}
+
+
+def cross_attn_forward(
+    x: jax.Array, p: dict, kv: dict, dims: AttnDims
+) -> jax.Array:
+    """x: [B, S, D] queries over fixed memory KV ([B, Hkv, F, Dh])."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    if dims.bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, dims.n_heads, dims.head_dim).transpose(0, 2, 1, 3)
+    o = ops.flash_attention_jnp(
+        q, kv["k"], kv["v"], causal=False,
+        q_chunk=_chunk(s, 512),
+        kv_chunk=_chunk(kv["k"].shape[2], dims.attn_chunk),
+    )
+    return _merge_heads(o, p, dims)
+
+
+def cross_attn_decode(
+    x: jax.Array, p: dict, kv: dict, dims: AttnDims
+) -> jax.Array:
+    b, _ = x.shape
+    q = jnp.einsum("bd,dh->bh", x, p["wq"])
+    if dims.bias:
+        q = q + p["bq"]
+    q = q.reshape(b, dims.n_heads, dims.head_dim)
+    f = kv["k"].shape[2]
+    lens = jnp.full((b,), f, jnp.int32)
+    o = ops.flash_decode(q, kv["k"], kv["v"], lens)
+    out = jnp.einsum("bh,hd->bd", o.reshape(b, -1), p["wo"])
+    if dims.bias:
+        out = out + p["bo"]
+    return out

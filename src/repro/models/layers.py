@@ -1,0 +1,137 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings.
+
+Pure functions over parameter dicts declared with :class:`repro.common.params.P`
+so every layer carries its logical sharding axes (resolved to NamedSharding
+by ``repro.distributed.sharding``).  Logical axis vocabulary:
+
+    embed   — d_model          (FSDP candidate)
+    mlp     — d_ff             (tensor-parallel: "model" mesh axis)
+    heads   — n_heads·head_dim fused QKV output (tensor-parallel)
+    kv      — n_kv_heads·head_dim
+    vocab   — vocabulary       (tensor-parallel)
+    experts — MoE expert count (expert-parallel)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import P
+
+
+def rms_norm_p() -> dict:
+    return {"scale": P(shape=(-1,), axes=("embed",), init="ones")}
+
+
+def sized(tree, **dims):
+    """Resolve -1 placeholders in P shapes using the axis-name → size map."""
+
+    def fix(p: P):
+        shape = tuple(
+            dims[ax] if s == -1 else s for s, ax in zip(p.shape, p.axes)
+        )
+        return P(shape=shape, axes=p.axes, init=p.init, dtype=p.dtype,
+                 scale=p.scale, fan_in_axes=p.fan_in_axes)
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, Dh] (heads batched in leading dims), positions: [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_p() -> dict:
+    """Gated MLP (llama/phi3 family): fused gate+up then down."""
+    return {
+        "w_gate": P(shape=(-1, -1), axes=("embed", "mlp")),
+        "w_up": P(shape=(-1, -1), axes=("embed", "mlp")),
+        "w_down": P(shape=(-1, -1), axes=("mlp", "embed")),
+    }
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def gelu_mlp_p() -> dict:
+    """Plain GELU MLP (whisper)."""
+    return {
+        "w_in": P(shape=(-1, -1), axes=("embed", "mlp")),
+        "b_in": P(shape=(-1,), axes=("mlp",), init="zeros"),
+        "w_out": P(shape=(-1, -1), axes=("mlp", "embed")),
+        "b_out": P(shape=(-1,), axes=("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_p() -> dict:
+    return {"table": P(shape=(-1, -1), axes=("vocab", "embed"), init="embed")}
+
+
+def embed(tokens: jax.Array, p: dict, dtype) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def unembed_p(tied: bool) -> dict:
+    if tied:
+        return {}
+    return {"w": P(shape=(-1, -1), axes=("embed", "vocab"))}
+
+
+def unembed(x: jax.Array, p: dict, embed_params: dict) -> jax.Array:
+    if "w" in p:
+        return jnp.einsum("...d,dv->...v", x, p["w"])
+    return jnp.einsum("...d,vd->...v", x, embed_params["table"])

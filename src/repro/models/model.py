@@ -1,0 +1,721 @@
+"""Architecture assembly: one ``Model`` facade over all 10 assigned archs.
+
+Layer stacking uses ``lax.scan`` over *repeating blocks*: ``period`` =
+smallest repeating pattern of layer kinds (1 for homogeneous stacks, 8 for
+Jamba's attn:mamba 1:7 interleave with period-2 MoE), and parameters are
+stacked ``[n_layers // period, ...]`` so the HLO stays O(period) regardless
+of depth — this is what keeps 61-layer kimi-k2 compile times sane and remat
+policies uniform.
+
+Entry points (all pure, jit/pjit-ready):
+  * ``loss_fn(params, batch)``     → (scalar loss, metrics)   [train shapes]
+  * ``prefill_fn(params, batch)``  → (logits, cache)          [prefill shapes]
+  * ``decode_fn(params, cache, tokens, pos)`` → (logits, cache)  [decode]
+  * ``init_cache_fn(batch, max_len)``
+
+Caches are pytrees with the same block-stacked leading axis, so decode also
+scans.  Vocab is padded to a multiple of 256 for clean 16-way tensor
+parallelism (granite 49155 → 49408, whisper 51865 → 52096); loss slices the
+live columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import params as par
+from repro.common.params import P
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe, rwkv6, ssm
+
+VOCAB_PAD = 256
+RWKV_CHUNK = 64  # wkv6 materializes [B,H,Q,Q,dh]; 64 keeps it VMEM-friendly
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# Layer plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    mixer: str  # attn | ssm | rwkv
+    mlp: str  # swiglu | gelu | moe | moe_dense | rwkv_cm
+
+
+def layer_plan(cfg: ModelConfig) -> list[LayerPlan]:
+    """The repeating block pattern for this architecture."""
+    if cfg.family == "ssm":
+        return [LayerPlan("rwkv", "rwkv_cm")]
+    periods = [1]
+    if cfg.moe is not None:
+        periods.append(cfg.moe.layer_period)
+    if cfg.attn_period > 0:
+        periods.append(cfg.attn_period)
+    period = int(np.lcm.reduce(periods))
+    plans = []
+    for i in range(period):
+        mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+        if cfg.is_moe_layer(i):
+            mlp = "moe_dense" if cfg.dense_residual_ff else "moe"
+        else:
+            mlp = "gelu" if cfg.family == "encdec" else "swiglu"
+        plans.append(LayerPlan(mixer, mlp))
+    return plans
+
+
+def _dims(cfg: ModelConfig):
+    attn_dims = attention.AttnDims(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        attn_chunk=cfg.attn_chunk,
+        bias=cfg.family == "encdec",
+        impl=cfg.attn_impl,
+        seq_shard=cfg.attn_seq_shard,
+    )
+    ssm_dims = None
+    if cfg.ssm is not None and cfg.family in ("hybrid",):
+        ssm_dims = ssm.SSMDims(
+            d_model=cfg.d_model,
+            d_state=cfg.ssm.d_state,
+            d_conv=cfg.ssm.d_conv,
+            expand=cfg.ssm.expand,
+            dt_rank=cfg.ssm.dt_rank,
+            chunk=cfg.mixer_chunk or cfg.ssm.chunk,
+        )
+    rwkv_dims = None
+    if cfg.family == "ssm":
+        default = min(cfg.ssm.chunk if cfg.ssm else RWKV_CHUNK, RWKV_CHUNK)
+        rwkv_dims = rwkv6.RWKVDims(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            head_dim=cfg.resolved_head_dim,
+            chunk=cfg.mixer_chunk or default,
+            lora_rank=max(32, cfg.d_model // 64),
+            decay_lora_rank=max(32, cfg.d_model // 32),
+        )
+    moe_dims = None
+    if cfg.moe is not None:
+        moe_dims = moe.MoEDims(
+            d_model=cfg.d_model,
+            d_ff=cfg.moe.d_ff,
+            n_experts=cfg.moe.n_experts,
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            n_shared_experts=cfg.moe.n_shared_experts,
+            n_dispatch_groups=cfg.moe_dispatch_groups,
+        )
+    return attn_dims, ssm_dims, rwkv_dims, moe_dims
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec
+# ---------------------------------------------------------------------------
+
+
+def _norm_p(d: int) -> dict:
+    return {"scale": P(shape=(d,), axes=("embed",), init="ones")}
+
+
+def _ln_p(d: int) -> dict:
+    return {
+        "scale": P(shape=(d,), axes=("embed",), init="ones"),
+        "bias": P(shape=(d,), axes=("embed",), init="zeros"),
+    }
+
+
+def _layer_spec(cfg: ModelConfig, plan: LayerPlan) -> dict:
+    attn_dims, ssm_dims, rwkv_dims, moe_dims = _dims(cfg)
+    d = cfg.d_model
+    spec: dict[str, Any] = {}
+    if plan.mixer == "attn":
+        spec["ln1"] = _ln_p(d) if cfg.family == "encdec" else _norm_p(d)
+        spec["attn"] = attention.attn_p(attn_dims)
+    elif plan.mixer == "ssm":
+        spec["ln1"] = _norm_p(d)
+        spec["ssm"] = ssm.ssm_p(ssm_dims)
+    elif plan.mixer == "rwkv":
+        spec["ln1"] = _norm_p(d)
+        spec["tm"] = rwkv6.time_mix_p(rwkv_dims)
+    if plan.mlp in ("swiglu", "gelu"):
+        spec["ln2"] = _ln_p(d) if cfg.family == "encdec" else _norm_p(d)
+    if plan.mlp == "swiglu":
+        spec["mlp"] = layers.sized(layers.swiglu_p(), embed=d, mlp=cfg.d_ff)
+    elif plan.mlp == "gelu":
+        spec["mlp"] = layers.sized(layers.gelu_mlp_p(), embed=d, mlp=cfg.d_ff)
+    elif plan.mlp in ("moe", "moe_dense"):
+        spec["ln2"] = _norm_p(d)
+        spec["moe"] = moe.moe_p(moe_dims)
+        if plan.mlp == "moe_dense":
+            spec["dense_mlp"] = layers.sized(
+                layers.swiglu_p(), embed=d, mlp=cfg.dense_residual_ff
+            )
+    elif plan.mlp == "rwkv_cm":
+        spec["ln2"] = _norm_p(d)
+        spec["cm"] = rwkv6.channel_mix_p(rwkv_dims, cfg.d_ff)
+    return spec
+
+
+def _encoder_layer_spec(cfg: ModelConfig) -> dict:
+    attn_dims = _dims(cfg)[0]
+    return {
+        "ln1": _ln_p(cfg.d_model),
+        "attn": attention.attn_p(attn_dims),
+        "ln2": _ln_p(cfg.d_model),
+        "mlp": layers.sized(
+            layers.gelu_mlp_p(), embed=cfg.d_model, mlp=cfg.d_ff
+        ),
+    }
+
+
+def _decoder_layer_spec(cfg: ModelConfig) -> dict:
+    spec = _encoder_layer_spec(cfg)
+    spec["ln_cross"] = _ln_p(cfg.d_model)
+    spec["cross"] = attention.attn_p(_dims(cfg)[0])
+    return spec
+
+
+def param_spec(cfg: ModelConfig, *, max_seq_len: int = 0) -> dict:
+    d = cfg.d_model
+    pv = padded_vocab(cfg.vocab_size)
+    spec: dict[str, Any] = {
+        "embed": layers.sized(layers.embed_p(), vocab=pv, embed=d),
+        "final_norm": _ln_p(d) if cfg.family == "encdec" else _norm_p(d),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = layers.sized(
+            layers.unembed_p(tied=False), embed=d, vocab=pv
+        )
+    if cfg.family == "encdec":
+        spec["enc_pos"] = P(
+            shape=(cfg.n_audio_frames, d), axes=(None, "embed"),
+            init="normal", scale=0.02,
+        )
+        spec["dec_pos"] = P(
+            shape=(max(max_seq_len, 448), d), axes=(None, "embed"),
+            init="normal", scale=0.02,
+        )
+        spec["enc_blocks"] = par.stack(
+            [_encoder_layer_spec(cfg)], cfg.n_encoder_layers
+        )
+        spec["blocks"] = par.stack([_decoder_layer_spec(cfg)], cfg.n_layers)
+        spec["enc_final_norm"] = _ln_p(d)
+        return spec
+    if cfg.family == "vlm":
+        vit_d = 3200  # InternViT-6B hidden size (frontend stub boundary)
+        spec["projector"] = {
+            "ln": _ln_p(vit_d),
+            "w1": P(shape=(vit_d, d), axes=(None, "embed")),
+            "b1": P(shape=(d,), axes=("embed",), init="zeros"),
+            "w2": P(shape=(d, d), axes=("embed", "embed2")),
+            "b2": P(shape=(d,), axes=("embed",), init="zeros"),
+        }
+    plans = layer_plan(cfg)
+    if cfg.n_layers % len(plans):
+        raise ValueError(
+            f"{cfg.name}: n_layers={cfg.n_layers} not divisible by layer "
+            f"period {len(plans)}"
+        )
+    spec["blocks"] = par.stack(
+        [_layer_spec(cfg, p) for p in plans], cfg.n_layers // len(plans)
+    )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _apply_norm(x, p, cfg: ModelConfig):
+    if "bias" in p:
+        return layers.layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return layers.rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def cast_params(cfg: ModelConfig, params, dtype):
+    """Cast float params to the compute dtype, honoring per-leaf explicit
+    dtypes in the spec (f32 routers / SSM decay logs stay f32).  Master
+    copies stay in the optimizer; this is the standard bf16-compute cast."""
+    spec = param_spec(cfg, max_seq_len=1)
+
+    def cast(leaf, p):
+        if p.dtype is not None or not jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+            return leaf
+        return leaf.astype(dtype)
+
+    return jax.tree.map(cast, params, spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _apply_mlp(x, spec_p, plan: LayerPlan, cfg, moe_dims):
+    aux = {}
+    if plan.mlp == "swiglu":
+        return layers.swiglu(x, spec_p["mlp"]), aux
+    if plan.mlp == "gelu":
+        return layers.gelu_mlp(x, spec_p["mlp"]), aux
+    if plan.mlp in ("moe", "moe_dense"):
+        y, aux = moe.moe_forward(x, spec_p["moe"], moe_dims)
+        if plan.mlp == "moe_dense":
+            y = y + layers.swiglu(x, spec_p["dense_mlp"])
+        return y, aux
+    if plan.mlp == "rwkv_cm":
+        return rwkv6.channel_mix_forward(x, spec_p["cm"]), aux
+    raise ValueError(plan.mlp)
+
+
+def _block_forward(cfg: ModelConfig, plans, dims, x, bparams, *, causal=True):
+    """One repeating block (period layers), training/forward mode."""
+    attn_dims, ssm_dims, rwkv_dims, moe_dims = dims
+    aux_acc = {"load_balance": 0.0, "router_z": 0.0, "dropped_fraction": 0.0}
+    for pos, plan in enumerate(plans):
+        lp = bparams[pos]
+        h = _apply_norm(x, lp["ln1"], cfg)
+        if plan.mixer == "attn":
+            h = attention.attn_forward(h, lp["attn"], attn_dims, causal=causal)
+        elif plan.mixer == "ssm":
+            h = ssm.ssm_forward(h, lp["ssm"], ssm_dims)
+        else:  # rwkv
+            h = rwkv6.time_mix_forward(h, lp["tm"], rwkv_dims)
+        x = x + h
+        h = _apply_norm(x, lp["ln2"], cfg)
+        h, aux = _apply_mlp(h, lp, plan, cfg, moe_dims)
+        for k, v in aux.items():
+            aux_acc[k] = aux_acc[k] + v
+        x = x + h
+    return x, aux_acc
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(fn)  # full
+
+
+def _stack_forward(cfg: ModelConfig, x, blocks_params, *, causal=True):
+    plans = layer_plan(cfg)
+    dims = _dims(cfg)
+
+    def body(carry, bparams):
+        x, lb, rz, dp = carry
+        x, aux = _block_forward(cfg, plans, dims, x, bparams, causal=causal)
+        return (
+            x,
+            lb + aux["load_balance"],
+            rz + aux["router_z"],
+            dp + aux["dropped_fraction"],
+        ), None
+
+    body = _remat(body, cfg.remat)
+    (x, lb, rz, dp), _ = jax.lax.scan(
+        body, (x, 0.0, 0.0, 0.0), blocks_params
+    )
+    n_blocks = cfg.n_layers // len(plans)
+    aux = {
+        "load_balance": lb / n_blocks,
+        "router_z": rz / n_blocks,
+        "dropped_fraction": dp / n_blocks,
+    }
+    return x, aux
+
+
+def _whisper_encode(cfg: ModelConfig, params, frames):
+    """frames: [B, F, D] (stub conv frontend output)."""
+    attn_dims = _dims(cfg)[0]
+    x = frames + params["enc_pos"].astype(frames.dtype)
+
+    def body(x, lp):
+        lp = lp[0]  # one-layer repeating block
+        h = layers.layer_norm(
+            x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps
+        )
+        h = attention.attn_forward(h, lp["attn"], attn_dims, causal=False)
+        x = x + h
+        h = layers.layer_norm(
+            x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps
+        )
+        x = x + layers.gelu_mlp(h, lp["mlp"])
+        return x, None
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    fn = params["enc_final_norm"]
+    return layers.layer_norm(x, fn["scale"], fn["bias"], cfg.norm_eps)
+
+
+def _whisper_decode_stack(cfg: ModelConfig, params, x, memory):
+    attn_dims = _dims(cfg)[0]
+
+    def body(carry, lp):
+        x = carry
+        lp = lp[0]  # one-layer repeating block
+        h = layers.layer_norm(
+            x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps
+        )
+        h = attention.attn_forward(h, lp["attn"], attn_dims, causal=True)
+        x = x + h
+        h = layers.layer_norm(
+            x, lp["ln_cross"]["scale"], lp["ln_cross"]["bias"], cfg.norm_eps
+        )
+        kv = attention.cross_attn_kv(memory, lp["cross"], attn_dims)
+        h = attention.cross_attn_forward(h, lp["cross"], kv, attn_dims)
+        x = x + h
+        h = layers.layer_norm(
+            x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps
+        )
+        x = x + layers.gelu_mlp(h, lp["mlp"])
+        return x, None
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch, dtype):
+    """Token (+modality) embedding; returns (x [B,S,D], text_offset)."""
+    x = layers.embed(batch["tokens"], params["embed"], dtype)
+    if cfg.family == "vlm":
+        pp = params["projector"]
+        pe = layers.layer_norm(
+            batch["patch_embeds"].astype(dtype), pp["ln"]["scale"],
+            pp["ln"]["bias"], cfg.norm_eps,
+        )
+        pe = jnp.einsum("bpd,de->bpe", pe, pp["w1"]) + pp["b1"]
+        pe = jax.nn.gelu(pe.astype(jnp.float32)).astype(dtype)
+        pe = jnp.einsum("bpd,de->bpe", pe, pp["w2"]) + pp["b2"]
+        x = jnp.concatenate([pe, x], axis=1)
+        return x, batch["patch_embeds"].shape[1]
+    if cfg.family == "encdec":
+        s = x.shape[1]
+        x = x + params["dec_pos"][:s].astype(dtype)
+    return x, 0
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x32 = x
+    if "unembed" in params:
+        return layers.unembed(x32, params["unembed"], params["embed"])
+    return layers.unembed(x32, {}, params["embed"])
+
+
+def forward(cfg: ModelConfig, params, batch, *, dtype=jnp.bfloat16):
+    """Full-sequence logits (train / prefill compute shape).
+
+    batch: tokens [B,S]; + patch_embeds (vlm) / frames (encdec).
+    Returns (logits [B, S_text, Vpad], aux).
+    """
+    params = cast_params(cfg, params, dtype)
+    x, n_prefix = _embed_inputs(cfg, params, batch, dtype)
+    if cfg.family == "encdec":
+        memory = _whisper_encode(cfg, params, batch["frames"].astype(dtype))
+        x = _whisper_decode_stack(cfg, params, x, memory)
+        aux = {}
+    else:
+        x, aux = _stack_forward(cfg, x, params["blocks"])
+    x = _apply_norm(x, params["final_norm"], cfg)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, dtype=jnp.bfloat16):
+    """Next-token cross entropy (f32 softmax) + MoE aux losses."""
+    logits, aux = forward(cfg, params, batch, dtype=dtype)
+    labels = batch["labels"]
+    v = cfg.vocab_size
+    lg = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(
+        jnp.where(
+            jnp.arange(lg.shape[-1]) < v, lg, -jnp.inf
+        ),
+        axis=-1,
+    )
+    gold = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / ntok
+    metrics = {"nll": loss, "ntokens": ntok}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.load_balance_loss * aux["load_balance"]
+        loss = loss + cfg.moe.router_z_loss * aux["router_z"]
+        metrics.update(
+            load_balance=aux["load_balance"],
+            router_z=aux["router_z"],
+            dropped_fraction=aux["dropped_fraction"],
+        )
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg, plan: LayerPlan, batch, max_len, dtype):
+    attn_dims, ssm_dims, rwkv_dims, _ = _dims(cfg)
+    if plan.mixer == "attn":
+        return attention.init_kv_cache(batch, max_len, attn_dims, dtype)
+    if plan.mixer == "ssm":
+        return ssm.init_ssm_cache(batch, ssm_dims, dtype)
+    return rwkv6.init_rwkv_cache(batch, rwkv_dims, cfg.d_model, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    plans = layer_plan(cfg)
+    n_blocks = cfg.n_layers // len(plans)
+    block = [
+        _layer_cache_spec(cfg, plan, batch, max_len, dtype) for plan in plans
+    ]
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_blocks, *a.shape)), block
+    )
+    cache: dict[str, Any] = {"layers": stacked}
+    if cfg.family == "encdec":
+        attn_dims = _dims(cfg)[0]
+        cache["cross_kv"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+            attention.init_kv_cache(
+                batch, cfg.n_audio_frames, attn_dims, dtype
+            ),
+        )
+    return cache
+
+
+def _block_decode(cfg, plans, dims, x, bparams, bcache, pos, cross_kv=None):
+    attn_dims, ssm_dims, rwkv_dims, moe_dims = dims
+    new_cache = []
+    for i, plan in enumerate(plans):
+        lp, lc = bparams[i], bcache[i]
+        h = _apply_norm(x, lp["ln1"], cfg)
+        if plan.mixer == "attn":
+            h, nc = attention.attn_decode(h, lp["attn"], lc, pos, attn_dims)
+        elif plan.mixer == "ssm":
+            h, nc = ssm.ssm_decode(h, lp["ssm"], lc, ssm_dims)
+        else:
+            h, nc = rwkv6.time_mix_decode(h, lp["tm"], lc, rwkv_dims)
+        x = x + h
+        if cross_kv is not None:
+            h = _apply_norm(x, lp["ln_cross"], cfg)
+            h = attention.cross_attn_decode(h, lp["cross"], cross_kv, attn_dims)
+            x = x + h
+        h = _apply_norm(x, lp["ln2"], cfg)
+        if plan.mlp == "rwkv_cm":
+            h, cm_x = rwkv6.channel_mix_decode(h, lp["cm"], lc["cm_x"])
+            nc = dict(nc, cm_x=cm_x)
+        else:
+            h, _ = _apply_mlp(h[:, None, :], lp, plan, cfg, moe_dims)
+            h = h[:, 0]
+        x = x + h
+        new_cache.append(nc)
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                *, dtype=jnp.bfloat16):
+    """One token for every sequence. tokens: [B] int32; pos: scalar int32.
+
+    Returns (logits [B, Vpad], new cache)."""
+    params = cast_params(cfg, params, dtype)
+    plans = layer_plan(cfg)
+    dims = _dims(cfg)
+    x = layers.embed(tokens, params["embed"], dtype)
+    if cfg.family == "encdec":
+        x = x + jax.lax.dynamic_index_in_dim(
+            params["dec_pos"], pos, keepdims=False
+        ).astype(dtype)
+
+        def body(x, lp_lc_kv):
+            lp, lc, kv = lp_lc_kv
+            x, nc = _block_decode(
+                cfg, plans, dims, x, lp, lc, pos, cross_kv=kv
+            )
+            return x, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["layers"], cache["cross_kv"]),
+        )
+        new_cache = {"layers": new_layers, "cross_kv": cache["cross_kv"]}
+    else:
+
+        def body(x, lp_lc):
+            lp, lc = lp_lc
+            x, nc = _block_decode(cfg, plans, dims, x, lp, lc, pos)
+            return x, nc
+
+        x, new_layers = jax.lax.scan(
+            body, x, (params["blocks"], cache["layers"])
+        )
+        new_cache = {"layers": new_layers}
+    x = _apply_norm(x[:, None, :], params["final_norm"], cfg)[:, 0]
+    logits = _logits(cfg, params, x)
+    return logits, new_cache
+
+
+def _pad_time(a, max_len):
+    pad = max_len - a.shape[2]
+    if pad <= 0:
+        return a[:, :, :max_len]
+    return jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int,
+            *, dtype=jnp.bfloat16):
+    """Process the prompt, return (last-position logits, cache at max_len).
+
+    Mixer states are produced by running the block stack in *stateful*
+    mode: attention layers emit their KV (padded to ``max_len``), SSM/RWKV
+    layers emit their final recurrent state.
+    """
+    params = cast_params(cfg, params, dtype)
+    plans = layer_plan(cfg)
+    dims = _dims(cfg)
+    attn_dims, ssm_dims, rwkv_dims, moe_dims = dims
+    x, n_prefix = _embed_inputs(cfg, params, batch, dtype)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _whisper_encode(cfg, params, batch["frames"].astype(dtype))
+
+    def body(x, bparams):
+        caches = []
+        for i, plan in enumerate(plans):
+            lp = bparams[i]
+            h = _apply_norm(x, lp["ln1"], cfg)
+            if plan.mixer == "attn":
+                h, kv = attention.attn_prefill(h, lp["attn"], attn_dims)
+                caches.append(
+                    {"k": _pad_time(kv["k"], max_len),
+                     "v": _pad_time(kv["v"], max_len)}
+                )
+            elif plan.mixer == "ssm":
+                u, z = ssm._project(h, lp["ssm"], ssm_dims)
+                u = ssm._conv_causal(u, lp["ssm"]["conv_w"], lp["ssm"]["conv_b"])
+                u_act = jax.nn.silu(u.astype(jnp.float32)).astype(h.dtype)
+                dt, bm, cm = ssm._ssm_inputs(u_act, lp["ssm"], ssm_dims)
+                y, h_fin = ssm._ssm_scan_chunked(
+                    u_act, dt, bm, cm, lp["ssm"]["a_log"], ssm_dims.chunk
+                )
+                y = y + u_act * lp["ssm"]["d_skip"].astype(y.dtype)
+                y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+                h = jnp.einsum("bti,id->btd", y, lp["ssm"]["w_out"])
+                # conv buffer: last (d_conv-1) pre-activation inputs
+                u_raw, _ = ssm._project(
+                    _apply_norm(x, lp["ln1"], cfg), lp["ssm"], ssm_dims
+                )
+                caches.append(
+                    {"conv": u_raw[:, -(ssm_dims.d_conv - 1):, :], "h": h_fin}
+                )
+            else:  # rwkv
+                h, last_x, s = rwkv6.time_mix_forward(
+                    h, lp["tm"], rwkv_dims, return_state=True
+                )
+                caches.append({"tm_x": last_x, "s": s})
+            x = x + h
+            if memory is not None:
+                hc = _apply_norm(x, lp["ln_cross"], cfg)
+                kv = attention.cross_attn_kv(memory, lp["cross"], attn_dims)
+                hc = attention.cross_attn_forward(hc, lp["cross"], kv, attn_dims)
+                x = x + hc
+                caches[-1] = caches[-1]  # cross kv handled at top level
+            h2 = _apply_norm(x, lp["ln2"], cfg)
+            if plan.mlp == "rwkv_cm":
+                y = rwkv6.channel_mix_forward(h2, lp["cm"])
+                caches[-1] = dict(caches[-1], cm_x=h2[:, -1])
+                x = x + y
+            else:
+                y, _ = _apply_mlp(h2, lp, plan, cfg, moe_dims)
+                x = x + y
+        return x, caches
+
+    x, stacked_caches = jax.lax.scan(body, x, params["blocks"])
+    cache: dict[str, Any] = {"layers": stacked_caches}
+    if cfg.family == "encdec":
+        def cross_body(_, lp):
+            return None, attention.cross_attn_kv(
+                memory, lp[0]["cross"], attn_dims
+            )
+        _, cross = jax.lax.scan(cross_body, None, params["blocks"])
+        cache["cross_kv"] = cross
+    x = _apply_norm(x, params["final_norm"], cfg)
+    logits = _logits(cfg, params, x[:, -1])
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    spec: dict
+    loss_fn: Callable
+    forward_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache_fn: Callable
+
+    def init(self, key, dtype=jnp.float32):
+        return par.init_params(self.spec, key, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return par.abstract_params(self.spec, dtype)
+
+    def logical_axes(self):
+        return par.logical_axes(self.spec)
+
+    @property
+    def n_params(self) -> int:
+        return par.param_count(self.spec)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top-k of the expert pool)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.n_params
+        flat = par.flatten_with_paths(self.spec)
+        total = 0
+        for name, p in flat:
+            n = int(np.prod(p.shape))
+            if ".moe.w_" in name or name.endswith(("moe.w_gate", "moe.w_up",
+                                                   "moe.w_down")):
+                n = n * cfg.moe.top_k // cfg.moe.n_experts
+            total += n
+        return total
+
+
+def build_model(cfg: ModelConfig, *, max_seq_len: int = 0) -> Model:
+    spec = param_spec(cfg, max_seq_len=max_seq_len)
+    return Model(
+        cfg=cfg,
+        spec=spec,
+        loss_fn=functools.partial(loss_fn, cfg),
+        forward_fn=functools.partial(forward, cfg),
+        prefill_fn=functools.partial(prefill, cfg),
+        decode_fn=functools.partial(decode_step, cfg),
+        init_cache_fn=functools.partial(init_cache, cfg),
+    )

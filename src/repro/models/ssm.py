@@ -1,0 +1,209 @@
+"""Mamba selective-SSM mixer (Jamba's sequence layer, arXiv:2312.00752 /
+2403.19887).
+
+Train/prefill path is a **chunked selective scan**: the sequence is cut into
+``chunk``-length pieces; within a chunk the linear recurrence
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ (B_t ⊗ x_t)
+    y_t = C_t · h_t + D ⊙ x_t
+
+is solved with ``jax.lax.associative_scan`` (materializes [B, Q, dI, dS]
+for one chunk only), and chunks are threaded with ``lax.scan`` carrying the
+[B, dI, dS] state — O(chunk) activation memory regardless of T, which is
+what makes the `long_500k` cell lowerable.  Decode is the O(1) single-step
+recurrence over (conv buffer, ssm state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import P
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int
+    d_conv: int
+    expand: int
+    dt_rank: int
+    chunk: int
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def _a_init(key, shape, dtype):
+    # S4D-real init: A = -(1..d_state), stored as log(-A).  ``shape`` may
+    # carry stacked leading block axes — broadcast over them.
+    d_state = shape[-1]
+    a = jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32))
+    return jnp.broadcast_to(a, shape).astype(dtype)
+
+
+def ssm_p(dims: SSMDims) -> dict:
+    di, ds, dr = dims.d_inner, dims.d_state, dims.resolved_dt_rank
+    return {
+        "w_in": P(shape=(dims.d_model, 2 * di), axes=("embed", "mlp")),
+        "conv_w": P(shape=(dims.d_conv, di), axes=(None, "mlp"),
+                    init="normal", scale=0.5),
+        "conv_b": P(shape=(di,), axes=("mlp",), init="zeros"),
+        "w_x": P(shape=(di, dr + 2 * ds), axes=("mlp", None)),
+        "w_dt": P(shape=(dr, di), axes=(None, "mlp")),
+        "b_dt": P(
+            shape=(di,), axes=("mlp",),
+            init=lambda k, s, d: jnp.log(
+                jnp.expm1(
+                    jnp.exp(
+                        jax.random.uniform(
+                            k, s, minval=math.log(1e-3), maxval=math.log(0.1)
+                        )
+                    )
+                )
+            ).astype(d),
+        ),
+        "a_log": P(shape=(di, ds), axes=("mlp", None), init=_a_init,
+                   dtype=jnp.float32),
+        "d_skip": P(shape=(di,), axes=("mlp",), init="ones",
+                    dtype=jnp.float32),
+        "w_out": P(shape=(di, dims.d_model), axes=("mlp", "embed")),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: [B, T, dI]; w: [K, dI]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is 4 — unrolled taps beat a gather on TPU
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_scan_chunked(
+    u: jax.Array,  # [B, T, dI] post-conv activations
+    dt: jax.Array,  # [B, T, dI] positive step sizes
+    bmat: jax.Array,  # [B, T, dS]
+    cmat: jax.Array,  # [B, T, dS]
+    a_log: jax.Array,  # [dI, dS]
+    chunk: int,
+    h0: jax.Array | None = None,  # [B, dI, dS]
+) -> tuple[jax.Array, jax.Array]:
+    b, t, di = u.shape
+    ds = bmat.shape[-1]
+    q = min(chunk, t)
+    if t % q:
+        raise ValueError(f"seq len {t} must divide chunk {q}")
+    n_chunks = t // q
+    a = -jnp.exp(a_log)  # [dI, dS], negative
+
+    uc = u.reshape(b, n_chunks, q, di).astype(jnp.float32)
+    dtc = dt.reshape(b, n_chunks, q, di).astype(jnp.float32)
+    bc = bmat.reshape(b, n_chunks, q, ds).astype(jnp.float32)
+    cc = cmat.reshape(b, n_chunks, q, ds).astype(jnp.float32)
+
+    def chunk_step(h, xs):
+        u_q, dt_q, b_q, c_q = xs  # [B, Q, ...]
+        decay = jnp.exp(dt_q[..., None] * a)  # [B, Q, dI, dS]
+        inc = (dt_q * u_q)[..., None] * b_q[:, :, None, :]  # [B, Q, dI, dS]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        acc_a, acc_b = jax.lax.associative_scan(
+            combine, (decay, inc), axis=1
+        )
+        hs = acc_a * h[:, None] + acc_b  # [B, Q, dI, dS]
+        y = jnp.einsum("bqds,bqs->bqd", hs, c_q)
+        return hs[:, -1], y
+
+    h = (
+        jnp.zeros((b, di, ds), jnp.float32) if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    xs = (
+        uc.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+        bc.transpose(1, 0, 2, 3),
+        cc.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(chunk_step, h, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, t, di)
+    return y.astype(u.dtype), h_final
+
+
+def _project(x, p, dims: SSMDims):
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    return u, z
+
+
+def _ssm_inputs(u_act, p, dims: SSMDims):
+    proj = jnp.einsum("bti,ir->btr", u_act, p["w_x"])
+    dr = dims.resolved_dt_rank
+    dt_low, bmat, cmat = jnp.split(proj, [dr, dr + dims.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_low, p["w_dt"]) + p["b_dt"]
+    )
+    return dt, bmat, cmat
+
+
+def ssm_forward(x: jax.Array, p: dict, dims: SSMDims) -> jax.Array:
+    """Full-sequence mixer. x: [B, T, D] → [B, T, D]."""
+    u, z = _project(x, p, dims)
+    u = _conv_causal(u, p["conv_w"], p["conv_b"])
+    u_act = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    dt, bmat, cmat = _ssm_inputs(u_act, p, dims)
+    y, _ = _ssm_scan_chunked(
+        u_act, dt, bmat, cmat, p["a_log"], dims.chunk
+    )
+    y = y + u_act * p["d_skip"].astype(y.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bti,id->btd", y, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) state
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(batch: int, dims: SSMDims, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+        "h": jnp.zeros((batch, dims.d_inner, dims.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(
+    x: jax.Array, p: dict, cache: dict, dims: SSMDims
+) -> tuple[jax.Array, dict]:
+    """One token. x: [B, D] → ([B, D], new cache)."""
+    xz = jnp.einsum("bd,de->be", x, p["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], u[:, None, :]], axis=1)
+    conv = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    u_act = jax.nn.silu(conv).astype(x.dtype)
+    dt, bmat, cmat = _ssm_inputs(u_act[:, None, :], p, dims)
+    dt, bmat, cmat = dt[:, 0], bmat[:, 0], cmat[:, 0]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # [B, dI, dS]
+    inc = (dt * u_act.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h = decay * cache["h"] + inc
+    y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32))
+    y = y + u_act.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), p["w_out"])
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,118 @@
+"""Batched serving engine: prefill + decode loop with a slot-based batch.
+
+The paper's resource split puts *query serving on CPUs* for ANN search; the
+LM substrate mirrors the same philosophy: serving is a long-running,
+latency-sensitive loop that must never contend with build/train resources.
+
+``ServeEngine`` implements static-slot continuous batching: a fixed batch of
+``n_slots`` sequences decodes in lockstep (one jit'd ``decode_fn`` call per
+token); finished sequences free their slot and the next queued request is
+prefilled into it.  Greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    n_slots: int = 4
+    temperature: float = 0.0  # 0 → greedy
+    eos_id: int = -1  # -1 → run to max_new_tokens
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 32
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode_fn)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill_fn(p, b, cfg.max_len)
+        )
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        v = self.model.cfg.vocab_size
+        logits = logits[..., :v]
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.cfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve requests in waves of ``n_slots`` (static-slot batching).
+
+        All prompts within a wave are right-aligned to the wave's max prompt
+        length (left-padding) so decode positions align.
+        """
+        queue = list(requests)
+        while queue:
+            wave = queue[: self.cfg.n_slots]
+            queue = queue[len(wave):]
+            self._run_wave(wave)
+        return requests
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        b = len(wave)
+        s = max(len(r.prompt) for r in wave)
+        tokens = np.zeros((b, s), np.int32)
+        for i, r in enumerate(wave):
+            tokens[i, s - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(tokens)}
+        logits, cache = self._prefill(self.params, batch)
+        next_tok = self._sample(logits)
+        max_new = max(r.max_new_tokens for r in wave)
+        pos = s
+        active = np.ones(b, bool)
+        for step in range(max_new):
+            for i, r in enumerate(wave):
+                if active[i]:
+                    tok = int(np.asarray(next_tok)[i])
+                    r.output.append(tok)
+                    if (
+                        tok == self.cfg.eos_id
+                        or len(r.output) >= r.max_new_tokens
+                    ):
+                        r.done = True
+                        active[i] = False
+            if not active.any() or pos >= self.cfg.max_len - 1:
+                break
+            logits, cache = self._decode(
+                self.params, cache, next_tok, jnp.int32(pos)
+            )
+            next_tok = self._sample(logits)
+            pos += 1
+        for r in wave:
+            r.done = True
+
+
+def serve_step_fn(model: Model) -> Callable:
+    """The dry-run's serve_step: one decode step over a full cache
+    (the ``decode_*`` / ``long_*`` cells lower exactly this)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_fn(params, cache, tokens, pos)
+
+    return serve_step

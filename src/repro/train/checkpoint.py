@@ -1,0 +1,125 @@
+"""Checkpoint save/restore with elastic re-sharding.
+
+Layout: ``<dir>/step_<n>/`` containing one ``.npy`` per leaf (dot-path
+filenames) plus ``manifest.json`` (step, leaf index, shapes/dtypes, user
+metadata).  Arrays are written *unsharded* so a checkpoint taken on one mesh
+restores onto **any** mesh/device count — the elastic-scaling contract: on
+restore, each leaf is ``device_put`` against the sharding resolved for the
+*new* mesh.  (A multi-host deployment writes per-host shards with the same
+manifest schema; this container is single-process, noted in DESIGN.md.)
+
+Fault-tolerance contract used by ``launch.train``:
+  * atomic publish — write to ``tmp_step_<n>`` then rename;
+  * ``latest_step`` scans for the newest complete manifest, so a job killed
+    mid-write restarts from the previous step (crash-consistent);
+  * the data pipeline seeks to ``step·global_batch`` so restarts do not
+    replay or skip data.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree) -> list[tuple[str, object]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def save(directory: str, step: int, tree, *, metadata: dict | None = None):
+    """Atomic checkpoint publish."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = os.path.join(directory, f"tmp_step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leaf_paths(tree)
+    index = []
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index.append(
+            {"path": name, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    manifest = {"step": step, "leaves": index, "metadata": metadata or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    """Newest step with a complete manifest (crash-consistent)."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+            os.path.join(directory, name, _MANIFEST)
+        ):
+            steps.append(int(name[len("step_"):]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree``; ``shardings`` (same
+    structure, NamedSharding leaves) re-shards elastically onto the current
+    mesh."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten(like_tree)
+    if len(flat) != len(leaves_meta):
+        raise ValueError(
+            f"checkpoint has {len(leaves_meta)} leaves, tree expects "
+            f"{len(flat)}"
+        )
+    sh_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(flat)
+    )
+    out = []
+    for meta, like, sh in zip(leaves_meta, flat, sh_flat):
+        arr = np.load(os.path.join(d, meta["file"]))
+        if list(arr.shape) != list(np.shape(like)):
+            raise ValueError(
+                f"leaf {meta['path']}: checkpoint shape {arr.shape} != "
+                f"expected {np.shape(like)}"
+            )
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return treedef.unflatten(out), manifest
+
+
+def restore_latest(directory: str, like_tree, *, shardings=None):
+    step = latest_step(directory)
+    if step is None:
+        return None
+    tree, manifest = restore(directory, step, like_tree, shardings=shardings)
+    return step, tree, manifest

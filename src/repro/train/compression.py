@@ -1,0 +1,55 @@
+"""int8 gradient compression with error feedback (1-bit-Adam-style).
+
+Cross-pod (DCN) gradient reduction is the bandwidth-critical collective at
+multi-pod scale; quantizing the reduced tensor to int8 cuts those bytes 4×
+(fp32) / 2× (bf16).  This module implements the numerics — per-tensor absmax
+scaling, stochastic-free deterministic rounding, and an **error-feedback
+buffer** so quantization error is carried into the next step rather than
+lost (required for convergence; Karimireddy et al. 2019).
+
+In the pjit training step the quantize→dequantize pair brackets the gradient
+tree before the optimizer; XLA's gradient all-reduce then operates on values
+that round-trip int8, which is the semantics of a compressed collective.
+The actual byte saving on the wire is realized when the pod-axis reduction
+is performed manually (see ``train_step.make_train_step(compress_grads=...)``
+and EXPERIMENTS.md §Perf for the measured collective-term change).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor absmax int8 quantization → (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+
+
+def compress_with_feedback(grads, error_state):
+    """(compressed grads, new error state): g' = Q(g + e); e' = (g+e) − g'."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

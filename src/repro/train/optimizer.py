@@ -1,0 +1,208 @@
+"""Optimizers implemented directly on pytrees (no optax dependency).
+
+* **AdamW** — default for ≤14B archs.
+* **Adafactor** — factored second moments for the 480B/1T MoE archs: AdamW
+  state for 1T params is ~12 TB fp32, which does not fit 512×16 GB; the
+  factored statistics are O(d_in + d_out) per matrix (recorded per-arch in
+  EXPERIMENTS.md §Dry-run).
+
+Each optimizer exposes ``state_spec(param_spec)`` returning a ``P``
+declaration tree for its state so the FSDP sharding rules apply to optimizer
+state exactly as they do to parameters (ZeRO-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import params as par
+from repro.common.params import P
+
+
+def tree_zeros_like_spec(spec_tree):
+    return par.tree_map_p(
+        lambda p: P(shape=p.shape, axes=p.axes, init="zeros",
+                    dtype=jnp.float32),
+        spec_tree,
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]  # (grads, state, params, lr) -> (params, state)
+    state_spec: Callable[[Any], Any]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.copy, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_v = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [one(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+    def state_spec(param_spec):
+        z = tree_zeros_like_spec(param_spec)
+        return {
+            "mu": z,
+            "nu": tree_zeros_like_spec(param_spec),
+            "count": P(shape=(), axes=(), init="zeros", dtype=jnp.int32),
+        }
+
+    return Optimizer("adamw", init, update, state_spec)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+_FACTOR_MIN = 2  # factor last two dims when both ≥ this
+
+
+def _factored(shape) -> bool:
+    return (
+        len(shape) >= 2
+        and shape[-1] >= _FACTOR_MIN
+        and shape[-2] >= _FACTOR_MIN
+    )
+
+
+def adafactor(
+    decay: float = 0.99, eps: float = 1e-30, clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def one(x):
+            if _factored(x.shape):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(x, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+
+        def one(g, v, p):
+            g = g.astype(jnp.float32)
+            if _factored(g.shape):
+                g2 = g * g + eps
+                vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), 1e-30
+                )
+                upd = g / jnp.sqrt(
+                    jnp.maximum(r[..., None] * vc[..., None, :], 1e-30)
+                )
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv_full = decay * v["v"] + (1 - decay) * (g * g + eps)
+                upd = g / jnp.sqrt(jnp.maximum(nv_full, 1e-30))
+                nv = {"v": nv_full}
+            # RMS update clipping
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), nv
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [one(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_v = treedef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_v, "count": count}
+
+    def state_spec(param_spec):
+        def one(p: P):
+            if _factored(p.shape):
+                return {
+                    "vr": P(shape=p.shape[:-1], axes=p.axes[:-1],
+                            init="zeros", dtype=jnp.float32),
+                    "vc": P(shape=p.shape[:-2] + p.shape[-1:],
+                            axes=p.axes[:-2] + p.axes[-1:],
+                            init="zeros", dtype=jnp.float32),
+                }
+            return {"v": P(shape=p.shape, axes=p.axes, init="zeros",
+                           dtype=jnp.float32)}
+
+        return {
+            "v": par.tree_map_p(one, param_spec),
+            "count": P(shape=(), axes=(), init="zeros", dtype=jnp.int32),
+        }
+
+    return Optimizer("adafactor", init, update, state_spec)
+
+
+def for_config(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def optimizer_state_bytes(param_spec, name: str) -> int:
+    """Analytic optimizer-state footprint (EXPERIMENTS.md §Dry-run)."""
+    opt = for_config(name)
+    spec = opt.state_spec(param_spec)
+    total = 0
+    for _, p in par.flatten_with_paths(spec):
+        total += int(np.prod(p.shape)) * jnp.dtype(p.dtype or jnp.float32).itemsize
+    return total

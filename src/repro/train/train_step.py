@@ -1,0 +1,181 @@
+"""Training step: microbatched grad accumulation + clip + optimizer.
+
+``make_train_step`` closes over the model and optimizer and returns a pure
+``(state, batch) -> (state, metrics)`` suitable for jit/pjit.  The global
+batch is reshaped to ``[n_micro, microbatch, ...]`` and scanned — activation
+memory is bounded by one microbatch (the remat policy inside the model
+bounds per-layer memory), while gradient memory is one full tree (FSDP-
+sharded by the same rules as parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.model import Model
+from repro.train import compression
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    grad_clip: float = 1.0
+    microbatch: int = 0  # 0 → no accumulation
+    compress_grads: bool = False  # int8 + error feedback
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.learning_rate * warm
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    error_state: Optional[Any] = None  # compression feedback
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt_state", "step", "error_state"],
+    meta_fields=[],
+)
+
+
+def init_train_state(model: Model, opt: Optimizer, key,
+                     tcfg: TrainConfig | None = None) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        step=jnp.zeros((), jnp.int32),
+        error_state=(
+            compression.init_error_state(params)
+            if tcfg and tcfg.compress_grads else None
+        ),
+    )
+
+
+def _split_microbatches(batch: dict, microbatch: int) -> tuple[dict, int]:
+    b = batch["tokens"].shape[0]
+    mb = microbatch or b
+    if b % mb:
+        raise ValueError(f"global batch {b} not divisible by microbatch {mb}")
+    n = b // mb
+
+    def reshape(x):
+        x = x.reshape(n, mb, *x.shape[1:])
+        return shd.constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+    return jax.tree.map(reshape, batch), n
+
+
+def make_train_step(model: Model, opt: Optimizer, tcfg: TrainConfig):
+    def train_step(state: TrainState, batch: dict):
+        mbatches, n_micro = _split_microbatches(batch, tcfg.microbatch)
+        params = state.params
+
+        def mb_grads(mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True
+            )(params, mb)
+            return grads, metrics
+
+        if n_micro == 1:
+            grads, metrics = mb_grads(jax.tree.map(lambda x: x[0], mbatches))
+        else:
+            def body(acc, mb):
+                g, metrics = mb_grads(mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            grads, metrics_all = jax.lax.scan(body, zeros, mbatches)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+
+        error_state = state.error_state
+        if tcfg.compress_grads:
+            grads, error_state = compression.compress_with_feedback(
+                grads, error_state
+            )
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(tcfg, state.step)
+        new_params, new_opt = opt.update(grads, state.opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return (
+            TrainState(
+                params=new_params,
+                opt_state=new_opt,
+                step=state.step + 1,
+                error_state=error_state,
+            ),
+            metrics,
+        )
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# pjit plumbing for the production meshes
+# ---------------------------------------------------------------------------
+
+
+def state_spec(model: Model, opt: Optimizer, tcfg: TrainConfig):
+    """P-declaration tree mirroring TrainState (for sharding resolution)."""
+    from repro.common.params import P
+
+    return TrainState(
+        params=model.spec,
+        opt_state=opt.state_spec(model.spec),
+        step=P(shape=(), axes=(), init="zeros", dtype=jnp.int32),
+        error_state=(
+            jax.tree.map(
+                lambda p: P(shape=p.shape, axes=p.axes, init="zeros",
+                            dtype=jnp.float32),
+                model.spec,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            if tcfg.compress_grads else None
+        ),
+    )
+
+
+def sharded_train_step(model: Model, opt: Optimizer, tcfg: TrainConfig,
+                       mesh, batch_spec: dict, rules=None):
+    """jit'd train_step with in/out shardings resolved from logical axes.
+
+    ``batch_spec``: dict of ShapeDtypeStructs (from ``launch.specs``) — used
+    only to shape the batch shardings.
+    """
+    sspec = state_spec(model, opt, tcfg)
+    state_sh = shd.param_shardings(sspec, mesh, rules)
+    batch_sh = {
+        k: shd.batch_sharding(mesh, v.shape, rules)
+        for k, v in batch_spec.items()
+    }
+    step = make_train_step(model, opt, tcfg)
+
+    def wrapped(state, batch):
+        with shd.use_mesh_rules(mesh, rules):
+            return step(state, batch)
+
+    return jax.jit(
+        wrapped,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )

@@ -1,0 +1,84 @@
+"""bigann formats, block streaming, synthetic data, prefetch reader."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.data import formats
+from repro.data.pipeline import PrefetchReader
+from repro.data.synthetic import (exact_ground_truth, make_clustered,
+                                  recall_at)
+
+
+@pytest.mark.parametrize("ext,dtype", [(".fbin", np.float32),
+                                       (".u8bin", np.uint8),
+                                       (".i8bin", np.int8)])
+def test_bin_roundtrip(rng, ext, dtype):
+    data = (rng.normal(size=(100, 16)) * 50).astype(dtype)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x" + ext)
+        formats.write_bin(path, data)
+        assert formats.read_bin_header(path) == (100, 16)
+        back = formats.read_bin(path)
+        assert np.array_equal(np.asarray(back), data)
+        back2 = formats.read_bin(path, mmap=False)
+        assert np.array_equal(back2, data)
+
+
+def test_block_iteration(rng):
+    data = rng.normal(size=(100, 8)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.fbin")
+        formats.write_bin(path, data)
+        blocks = list(formats.iter_bin_blocks(path, 32))
+        assert [len(b) for b in blocks] == [32, 32, 32, 4]
+        assert np.array_equal(np.concatenate(blocks), data)
+
+
+def test_append_rows(rng):
+    a = rng.normal(size=(10, 4)).astype(np.float32)
+    b = rng.normal(size=(5, 4)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.fbin")
+        formats.append_rows(path, a)
+        formats.append_rows(path, b)
+        back = np.asarray(formats.read_bin(path))
+        assert back.shape == (15, 4)
+        assert np.array_equal(back, np.concatenate([a, b]))
+
+
+def test_ids_manifest(rng):
+    ids = rng.integers(0, 1_000_000, 50).astype(np.int64)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ids.ibin")
+        formats.write_ids(path, ids)
+        assert np.array_equal(formats.read_ids(path), ids.astype(np.int32))
+
+
+def test_synthetic_gt_is_exact():
+    ds = make_clustered(500, 16, n_queries=10, seed=0)
+    # brute force check for one query
+    q = np.asarray(ds.queries[0], np.float32)
+    d = ((np.asarray(ds.data, np.float32) - q) ** 2).sum(1)
+    want = np.argsort(d)[:10]
+    assert set(want) == set(ds.gt[0])
+
+
+def test_recall_metric():
+    gt = np.asarray([[1, 2, 3]])
+    assert recall_at(np.asarray([[1, 2, 3]]), gt, 3) == 1.0
+    assert recall_at(np.asarray([[1, 9, 8]]), gt, 3) == pytest.approx(1 / 3)
+
+
+def test_prefetch_reader_order(rng):
+    data = rng.normal(size=(1000, 4)).astype(np.float32)
+    blocks = list(PrefetchReader(data, 128))
+    assert np.array_equal(np.concatenate(blocks), data)
+
+
+def test_uint8_dataset_path():
+    ds = make_clustered(300, 8, n_queries=5, dtype="uint8", seed=1)
+    assert ds.data.dtype == np.uint8
+    assert ds.gt.shape == (5, 10)

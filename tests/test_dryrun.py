@@ -1,0 +1,52 @@
+"""Dry-run smoke: lower+compile real cells in a subprocess (the 512-device
+flag must precede jax init, so this cannot run in-process)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("tinyllama_1_1b", "decode_32k"),   # dense serve_step
+    ("rwkv6_1_6b", "long_500k"),        # recurrent-state 500k decode
+])
+def test_dryrun_cell_compiles(arch, shape):
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "r.json")
+        p = _run(["--arch", arch, "--shape", shape, "--mesh", "both",
+                  "--out", out, "--quiet"])
+        assert p.returncode == 0, p.stderr[-2000:]
+        results = json.load(open(out))
+        ok = [r for r in results if r.get("status") == "ok"]
+        assert len(ok) == 2  # single + multi pod
+        for r in ok:
+            assert r["n_devices"] in (256, 512)
+            assert r["flops"] > 0
+            assert r["bytes_accessed"] > 0
+
+
+def test_dryrun_skip_rule():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "r.json")
+        p = _run(["--arch", "phi3_mini_3_8b", "--shape", "long_500k",
+                  "--mesh", "single", "--out", out, "--quiet"])
+        assert p.returncode == 0, p.stderr[-2000:]
+        results = json.load(open(out))
+        assert results[0]["status"] == "skipped"
+        assert "sub-quadratic" in results[0]["reason"]

@@ -1,0 +1,39 @@
+"""Examples are part of the public API surface — smoke them in subprocesses
+(each uses the installed package exactly as a user would)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+
+
+def test_quickstart():
+    p = _run("quickstart.py")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "recall@10" in p.stdout
+
+
+def test_serve_lm():
+    p = _run("serve_lm.py", "--requests", "2", "--max-new", "4")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "served 2 requests" in p.stdout
+
+
+def test_train_lm_short(tmp_path):
+    p = _run("train_lm.py", "--steps", "6", "--batch", "2", "--seq", "64",
+             "--ckpt-dir", str(tmp_path), "--ckpt-every", "3")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "checkpoint →" in p.stdout
+    assert "done: final loss" in p.stdout

@@ -1,0 +1,154 @@
+"""Property tests for adaptive partitioning + selective replication (§V)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.core.partition as pt
+from repro.configs.base import IndexConfig
+from repro.core.kmeans import train_centroids
+
+
+def make_cfg(**kw):
+    base = dict(n_clusters=4, degree=8, build_degree=16, block_size=64,
+                kmeans_sample=512, capacity_slack=1.5)
+    base.update(kw)
+    return IndexConfig(**base)
+
+
+def run_partition(data, cfg, sequential=False, selective=True):
+    return pt.partition(np.asarray(data, np.float32), cfg,
+                        sequential=sequential, selective=selective)
+
+
+def check_invariants(data, cfg, res: pt.PartitionResult):
+    n = len(data)
+    # I1: every vector appears exactly once as an original
+    orig_count = np.zeros(n, np.int64)
+    total_count = np.zeros(n, np.int64)
+    for shard in res.shards:
+        orig = shard.ids[~shard.is_replica]
+        np.add.at(orig_count, orig, 1)
+        np.add.at(total_count, shard.ids, 1)
+        # I2b: no vector twice in one shard
+        assert len(np.unique(shard.ids)) == len(shard.ids)
+    assert (orig_count == 1).all(), "every vector must have exactly 1 original"
+    # I2: ≤ ω assignments
+    assert (total_count <= cfg.omega).all()
+    # I4: capacity respected
+    for shard in res.shards:
+        assert len(shard.ids) <= res.state.capacity
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(60, 300),
+    d=st.integers(4, 24),
+    seed=st.integers(0, 10_000),
+    eps=st.floats(1.05, 2.0),
+    omega=st.integers(1, 3),
+)
+def test_partition_invariants_vectorized(n, d, seed, eps, omega):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    cfg = make_cfg(epsilon=eps, omega=omega)
+    res = run_partition(data, cfg)
+    check_invariants(data, cfg, res)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(60, 150), seed=st.integers(0, 1000))
+def test_partition_invariants_sequential(n, seed):
+    """Literal Algorithm 1 satisfies the same invariants."""
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, 8)).astype(np.float32)
+    cfg = make_cfg()
+    res = run_partition(data, cfg, sequential=True)
+    check_invariants(data, cfg, res)
+
+
+def test_replica_constraints_hold_at_admission():
+    """I3: every admitted replica obeys d' < ε·d (distance constraint)."""
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(400, 12)).astype(np.float32)
+    cfg = make_cfg(epsilon=1.2)
+    cents = train_centroids(data, cfg.n_clusters, sample=400)
+    state = pt.PartitionState.create(
+        cents, pt.cluster_capacity(cfg, len(data)), cfg.theta
+    )
+    ba = pt.assign_block(data, state, cfg, tau=2.0)
+    dists = np.sqrt(np.maximum(pt.ops.pairwise_distance(
+        data.astype(np.float32), cents.astype(np.float32), "l2"
+    ), 0.0))
+    dists = np.asarray(dists)
+    for (row, c), dprime in zip(ba.replicas, ba.replica_dist):
+        d = ba.original_dist[row]
+        assert dprime < cfg.epsilon * max(d, 1e-30) + 1e-5
+        assert c != ba.original_cluster[row]
+
+
+def test_selectivity_monotone_replicas():
+    """Paper Table IV: smaller ε → fewer replicas; ε=∞ ≈ uniform DiskANN."""
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(2000, 16)).astype(np.float32)
+    data[:1000] *= 0.3  # dense core so replicas are attractive
+    props = []
+    for eps in (1.1, 1.3, 2.0):
+        cfg = make_cfg(epsilon=eps, block_size=256)
+        res = run_partition(data, cfg)
+        props.append(res.replica_proportion)
+    uniform = run_partition(data, make_cfg(block_size=256), selective=False)
+    assert props[0] <= props[1] <= props[2] + 1e-9
+    assert props[-1] <= uniform.replica_proportion + 1e-9
+    assert uniform.replica_proportion > 0.5  # ω=2 uniform ≈ 1 replica each
+
+
+def test_sequential_and_vectorized_agree_on_originals():
+    """Both paths give every vector its nearest *available* cluster; with
+    ample capacity assignments must coincide exactly."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(300, 8)).astype(np.float32)
+    cfg = make_cfg(capacity_slack=4.0)
+    cents = train_centroids(data, cfg.n_clusters, sample=300)
+    r1 = pt.partition(data, cfg, centroids=cents)
+    r2 = pt.partition(data, cfg, centroids=cents, sequential=True)
+    o1 = np.zeros(len(data), np.int64)
+    o2 = np.zeros(len(data), np.int64)
+    for c, s in enumerate(r1.shards):
+        o1[s.ids[~s.is_replica]] = c
+    for c, s in enumerate(r2.shards):
+        o2[s.ids[~s.is_replica]] = c
+    assert (o1 == o2).all()
+
+
+def test_blockwise_fairness_beats_greedy_order():
+    """§V-A Figure-2 scenario: capacity-aware assignment keeps the
+    nearest-cluster fraction high even with adversarial block order."""
+    rng = np.random.default_rng(4)
+    # two tight clusters, adversarial order: all of cluster A first
+    a = rng.normal(size=(500, 8)).astype(np.float32) * 0.2
+    b = rng.normal(size=(500, 8)).astype(np.float32) * 0.2 + 3.0
+    data = np.concatenate([a, b])
+    cfg = make_cfg(n_clusters=2, block_size=128, capacity_slack=1.1,
+                   omega=1)
+    res = run_partition(data, cfg)
+    assert res.stats["fairness_nearest_fraction"] > 0.95
+
+
+def test_tau_schedule():
+    cfg = make_cfg(tau0=2.0)
+    taus = [cfg.tau(i, 10) for i in range(10)]
+    assert taus[0] == pytest.approx(2.0)
+    assert taus[-1] == pytest.approx(1.0)
+    assert all(x >= y for x, y in zip(taus, taus[1:]))
+
+
+def test_theta_adapts_to_density():
+    """Dense clusters get smaller replica quotas (§V-A)."""
+    state = pt.PartitionState.create(np.zeros((4, 8), np.float32), 1000, 0.3)
+    state.original_counts = np.asarray([700, 100, 100, 100])
+    state.update_theta(0.3)
+    assert state.theta[0] < state.theta[1]

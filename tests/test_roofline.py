@@ -1,0 +1,134 @@
+"""HLO cost parser: loop-trip multiplication vs analytic ground truth."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_arch, smoke_config
+from repro.launch.hlo_cost import HloCost, analyze
+from repro.models.model import build_model, padded_vocab
+
+
+def test_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    r = analyze(c.as_text())
+    expected = 8 * 2 * 256 * 512 * 512
+    assert r["flops"] == pytest.approx(expected, rel=0.05)
+
+
+def test_nested_scan_trips():
+    def g(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = jax.jit(g).lower(x, w).compile()
+    r = analyze(c.as_text())
+    assert r["flops"] == pytest.approx(12 * 2 * 128 * 256 * 256, rel=0.05)
+
+
+def _analytic_fwd_flops(cfg, b, s):
+    d, h, kvh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh, ff = cfg.resolved_head_dim, cfg.d_ff
+    v = padded_vocab(cfg.vocab_size)
+    t = b * s
+    per_layer = (2 * t * d * (h * dh) + 2 * 2 * t * d * (kvh * dh)
+                 + 2 * t * (h * dh) * d + 3 * 2 * t * d * ff)
+    attn = 2 * 2 * t * s * (h * dh)
+    return cfg.n_layers * (per_layer + attn) + 2 * t * d * v
+
+
+@pytest.mark.parametrize("remat,mult", [("none", 3.0), ("full", 4.0)])
+def test_grad_flops_match_analytic(remat, mult):
+    """Dense train-grad HLO flops ≈ (3 or 4)× analytic forward (backward is
+    2×; full remat adds one recompute forward)."""
+    cfg = dataclasses.replace(
+        smoke_config(get_arch("tinyllama_1_1b")), n_layers=4, remat=remat
+    )
+    m = build_model(cfg)
+    b, s = 2, 64
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32)}
+    g = lambda p, bt: jax.grad(lambda pp: m.loss_fn(pp, bt)[0])(p)
+    c = jax.jit(g).lower(params, batch).compile()
+    r = analyze(c.as_text())
+    expected = mult * _analytic_fwd_flops(cfg, b, s)
+    assert r["flops"] == pytest.approx(expected, rel=0.2)
+
+
+def test_remat_visible_in_flops():
+    flops = {}
+    for remat in ("none", "full"):
+        cfg = dataclasses.replace(
+            smoke_config(get_arch("tinyllama_1_1b")), n_layers=4, remat=remat
+        )
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((2, 64), jnp.int32),
+                 "labels": jnp.ones((2, 64), jnp.int32)}
+        g = lambda p, bt: jax.grad(lambda pp: m.loss_fn(pp, bt)[0])(p)
+        c = jax.jit(g).lower(params, batch).compile()
+        flops[remat] = analyze(c.as_text())["flops"]
+    assert flops["full"] > flops["none"] * 1.1
+
+
+def test_collectives_inside_loops_are_multiplied():
+    """psum inside a scan must count trip× (XLA's cost_analysis misses it)."""
+    import numpy as np
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]), ("x",))
+    # single-device: no real collectives emitted; assert parser handles
+    # a hand-written module instead
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %ar = f32[128] all-reduce(%x), to_apply=%sum
+  ROOT %t = (s32[], f32[128]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128]) -> (s32[], f32[128]) {
+  %x = f32[128] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[128]) tuple(%z, %x)
+  ROOT %w = (s32[], f32[128]) while(%t0), condition=%cond, body=%body
+}
+"""
+    r = analyze(hlo)
+    assert r["collective_bytes"]["all-reduce"] == 10 * 128 * 4
+    assert r["n_collectives"] == 10

@@ -1,0 +1,164 @@
+"""Spot scheduler: paper §IV policies + §VIII extensions + §VI-C cost."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model
+from repro.core.scheduler import (CPU_MACHINE, V100_ONDEMAND, V100_SPOT,
+                                  Instance, InstanceType, RuntimeModel,
+                                  Scheduler, calibrate_runtime,
+                                  make_ondemand_pool, make_spot_pool,
+                                  make_tasks)
+
+RM = RuntimeModel(seconds_per_vector=1e-3)
+
+
+def test_availability_policy_no_double_assignment():
+    sch = Scheduler(make_tasks([1000] * 8), make_ondemand_pool(2), RM)
+    r = sch.run()
+    # 8 tasks × 1 s on 2 instances → exactly 4 s makespan, perfect packing
+    assert r.makespan_s == pytest.approx(4.0)
+    assert r.gpu_active_s == pytest.approx(8.0)
+
+
+def test_time_based_policy_avoids_short_lived_instance():
+    """A task longer than an instance's remaining lifetime must not be
+    assigned to it."""
+    itype = InstanceType("spot", 1.0, safe_duration_s=5.0, notice_s=1.0)
+    short = Instance(iid=0, itype=itype, launched_at=0.0, lifetime_s=5.0)
+    long_ = Instance(iid=1, itype=V100_ONDEMAND, launched_at=0.0)
+    sch = Scheduler(make_tasks([30_000]), [short, long_], RM)  # 30 s task
+    r = sch.run()
+    assert short.active_time == 0.0
+    assert long_.active_time == pytest.approx(30.0)
+    assert r.n_restarts == 0
+
+
+def test_preemption_reallocates_task():
+    itype = InstanceType("spot", 1.0, safe_duration_s=0.0, notice_s=1e9)
+    # notice arrives immediately → scheduler knows remaining lifetime
+    dying = Instance(iid=0, itype=itype, launched_at=0.0, lifetime_s=2.0)
+    backup = Instance(iid=1, itype=V100_ONDEMAND, launched_at=0.0)
+    sch = Scheduler(make_tasks([10_000]), [dying, backup], RM)
+    r = sch.run()
+    assert r.makespan_s == pytest.approx(10.0)
+    assert backup.active_time == pytest.approx(10.0)
+
+
+def test_preemption_without_notice_restarts():
+    itype = InstanceType("spot", 1.0, safe_duration_s=3600.0, notice_s=0.0)
+    dying = Instance(iid=0, itype=itype, launched_at=0.0, lifetime_s=5.0)
+    backup = Instance(iid=1, itype=V100_ONDEMAND, launched_at=0.0)
+    # one 10s task: starts on spot (within safe window per its knowledge),
+    # killed at 5s, restarted on backup
+    sch = Scheduler(make_tasks([10_000]), [dying, backup], RM)
+    r = sch.run()
+    assert r.n_preemptions >= 1
+    assert r.n_restarts == 1
+    assert r.work_lost_s == pytest.approx(5.0)
+    assert r.makespan_s == pytest.approx(15.0)
+
+
+def test_checkpoint_resume_reduces_lost_work():
+    itype = InstanceType("spot", 1.0, safe_duration_s=3600.0, notice_s=0.0)
+
+    def mk_pool():
+        return [
+            Instance(iid=0, itype=itype, launched_at=0.0, lifetime_s=5.0),
+            Instance(iid=1, itype=V100_ONDEMAND, launched_at=0.0),
+        ]
+
+    base = Scheduler(make_tasks([10_000]), mk_pool(), RM).run()
+    ck = Scheduler(make_tasks([10_000]), mk_pool(), RM,
+                   checkpoint_resume=True, checkpoint_interval_s=1.0).run()
+    assert ck.work_lost_s < base.work_lost_s
+    assert ck.makespan_s < base.makespan_s
+
+
+def test_straggler_speculation_improves_makespan():
+    slow = lambda iid, tid: 6.0 if tid == 2 else 1.0
+    spec = Scheduler(make_tasks([1000] * 16), make_ondemand_pool(4), RM,
+                     straggler_factor=1.5, slowdown=slow).run()
+    nospec = Scheduler(make_tasks([1000] * 16), make_ondemand_pool(4), RM,
+                       slowdown=slow).run()
+    assert spec.n_speculative == 1
+    assert spec.makespan_s < nospec.makespan_s
+
+
+def test_heterogeneous_pool_prefers_cheap_fast():
+    fast_cheap = InstanceType("a", price_per_hour=1.0, speed=2.0,
+                              safe_duration_s=math.inf, notice_s=0.0)
+    slow_pricey = InstanceType("b", price_per_hour=4.0, speed=1.0,
+                               safe_duration_s=math.inf, notice_s=0.0)
+    pool = [Instance(iid=0, itype=slow_pricey, launched_at=0.0),
+            Instance(iid=1, itype=fast_cheap, launched_at=0.0)]
+    sch = Scheduler(make_tasks([1000]), pool, RM)
+    sch.run()
+    assert pool[1].active_time > 0
+    assert pool[0].active_time == 0
+
+
+def test_spot_preferred_over_ondemand():
+    pool = [Instance(iid=0, itype=V100_ONDEMAND, launched_at=0.0),
+            Instance(iid=1, itype=V100_SPOT, launched_at=0.0,
+                     lifetime_s=1e9)]
+    sch = Scheduler(make_tasks([1000]), pool, RM)
+    sch.run()
+    assert pool[1].active_time > 0 and pool[0].active_time == 0
+
+
+def test_unschedulable_raises():
+    itype = InstanceType("spot", 1.0, safe_duration_s=1.0, notice_s=1e9)
+    pool = [Instance(iid=0, itype=itype, launched_at=0.0, lifetime_s=1.0)]
+    with pytest.raises(RuntimeError, match="unschedulable"):
+        Scheduler(make_tasks([100_000]), pool, RM).run()
+
+
+def test_scale_4096_instances():
+    sizes = list(np.random.default_rng(0).integers(10_000, 100_000, 4096))
+    r = Scheduler(make_tasks(sizes), make_ondemand_pool(4096), RM).run()
+    assert r.makespan_s == pytest.approx(max(sizes) * 1e-3, rel=1e-6)
+
+
+def test_multi_worker_near_linear_scaling():
+    """Table VII shape: 2×/4× workers speed up Σ-work near-linearly."""
+    sizes = [5_000] * 16
+    t1 = Scheduler(make_tasks(sizes), make_ondemand_pool(1), RM).run()
+    t2 = Scheduler(make_tasks(sizes), make_ondemand_pool(2), RM).run()
+    t4 = Scheduler(make_tasks(sizes), make_ondemand_pool(4), RM).run()
+    assert t1.makespan_s / t2.makespan_s == pytest.approx(2.0, rel=0.05)
+    assert t1.makespan_s / t4.makespan_s == pytest.approx(4.0, rel=0.05)
+
+
+def test_calibrate_runtime_linear_model():
+    clock = [0.0]
+
+    def fake_build(data):
+        clock[0] += 2e-4 * len(data) + 0.05
+
+    data = np.zeros((4096, 8), np.float32)
+    rm = calibrate_runtime(fake_build, data, (256, 512, 1024),
+                           timer=lambda: clock[0])
+    assert rm.seconds_per_vector == pytest.approx(2e-4, rel=0.05)
+    assert rm.fixed_overhead_s == pytest.approx(0.05, rel=0.2)
+
+
+def test_cost_model_paper_example():
+    """§VI-C: DiskANN ≈ $67.3 vs ScaleGANN ≈ $11.1 → ~6× cheaper."""
+    ex = cost_model.paper_example()
+    assert ex["diskann_cost"] == pytest.approx(67.3, abs=0.5)
+    assert ex["scalegann_cost"] == pytest.approx(11.1, abs=0.5)
+    assert ex["speedup_cost"] > 5.5
+    assert ex["transfer_s_bound"] <= 160 * 10  # sane bound
+
+
+def test_cost_model_components():
+    c = cost_model.scalegann_cost(3600.0, 1800.0, 36.0)
+    assert c.cpu_hours == pytest.approx((3600 + 36) / 3600)
+    assert c.accelerator_hours == pytest.approx((1800 + 36) / 3600)
+    assert c.total == pytest.approx(
+        c.cpu_hours * CPU_MACHINE.price_per_hour
+        + c.accelerator_hours * V100_SPOT.price_per_hour
+    )

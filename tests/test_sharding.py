@@ -1,0 +1,124 @@
+"""Sharding rules: divisibility-checked resolution + real arch specs."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.distributed import sharding as shd
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1 real device but arbitrary logical shape is fine for spec resolution
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+
+
+class FakeMesh:
+    """Spec-resolution-only mesh stand-in with production axis sizes."""
+
+    def __init__(self, shape=(2, 16, 16), axes=("pod", "data", "model")):
+        self.axis_names = axes
+        self.devices = np.zeros(shape)
+
+
+def test_resolve_divisible():
+    m = FakeMesh()
+    spec = shd.resolve_spec(("embed", "mlp"), (2048, 8192), m)
+    assert spec == PartitionSpec(("pod", "data"), "model")
+
+
+def test_resolve_drops_nondivisible_axis():
+    m = FakeMesh()
+    # 40 heads (phi3-medium fused head dim is divisible, raw head count not)
+    spec = shd.resolve_spec(("heads",), (40,), m)
+    assert spec == PartitionSpec()
+    # embed 2048: pod(2) divides, then data(16) → 2·16=32 divides
+    spec = shd.resolve_spec(("embed",), (2048,), m)
+    assert spec == PartitionSpec(("pod", "data"))
+    # dim 6: pod(2) divides, 2·16 doesn't → prefix stops at pod
+    spec = shd.resolve_spec(("embed",), (6,), m)
+    assert spec == PartitionSpec("pod")
+
+
+def test_resolve_no_axis_reuse():
+    m = FakeMesh()
+    # both dims want "model" — second one must drop it
+    spec = shd.resolve_spec(("mlp", "experts"), (8192, 128), m)
+    assert spec == PartitionSpec("model")
+
+
+def test_batch_sharding_small_batch():
+    m = FakeMesh()
+    s = shd.resolve_spec(("batch",), (1,), m)
+    assert s == PartitionSpec()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_shardings_resolve_for_all_archs(arch):
+    """Every parameter of every arch resolves to a legal PartitionSpec on
+    the production mesh shape (divisibility + axis-reuse checked)."""
+    m = FakeMesh()
+    model = build_model(get_arch(arch), max_seq_len=448)
+    from repro.common import params as par
+
+    def one(p):
+        spec = shd.resolve_spec(p.axes, p.shape, m, None)
+        used = [a for part in spec if part
+                for a in (part if isinstance(part, tuple) else (part,))]
+        assert len(used) == len(set(used))
+        for dim, part in zip(p.shape, tuple(spec) + (None,) * 10):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            n = int(np.prod([dict(zip(m.axis_names,
+                                      m.devices.shape))[a] for a in axes]))
+            assert dim % n == 0
+        return spec
+
+    specs = par.tree_map_p(one, model.spec)
+    # TP actually engages: at least one param sharded over "model"
+    flat = [s for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))]
+    assert any("model" in str(s) for s in flat), f"{arch}: no TP sharding"
+
+
+def test_constrain_noop_without_context():
+    x = jax.numpy.ones((4, 4))
+    y = shd.constrain(x, "batch", None)
+    assert y is x
+
+
+def test_seq_parallel_rules():
+    r = shd.seq_parallel_rules()
+    m = FakeMesh()
+    spec = shd.resolve_spec(("batch", "seq", "act_embed"), (1, 524288, 4096),
+                            m, r)
+    assert spec == PartitionSpec(None, "model")
+
+
+def test_fsdp_shards_bulk_of_params():
+    """≥80% of phi3-medium parameter bytes must be sharded (not replicated)
+    on the single-pod mesh — the ZeRO/TP posture that makes 14B fit."""
+    m = FakeMesh(shape=(16, 16), axes=("data", "model"))
+    model = build_model(get_arch("phi3_medium_14b"))
+    from repro.common import params as par
+
+    sharded, total = 0, 0
+    for _, p in par.flatten_with_paths(model.spec):
+        n = int(np.prod(p.shape))
+        spec = shd.resolve_spec(p.axes, p.shape, m, None)
+        factor = 1
+        for part in spec:
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            for a in axes:
+                factor *= dict(data=16, model=16)[a]
+        total += n
+        if factor > 1:
+            sharded += n
+    assert sharded / total > 0.8

@@ -1,0 +1,56 @@
+"""Input-spec construction: every (arch × shape) cell builds abstract
+inputs without allocating (ShapeDtypeStruct / eval_shape only)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, cells, get_arch
+from repro.launch import specs as lspecs
+
+
+@pytest.mark.parametrize("arch_id,shape_id", [
+    (a, s) for a, s, ok, _ in cells() if ok
+])
+def test_cell_specs_build(arch_id, shape_id):
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    cell = lspecs.make_cell(cfg, shape)
+    if cell.kind in ("train", "prefill"):
+        toks = cell.batch_specs["tokens"]
+        assert toks.shape[0] == shape.global_batch
+        assert toks.dtype == jnp.int32
+        if cfg.family == "vlm":
+            assert cell.batch_specs["patch_embeds"].shape == (
+                shape.global_batch, cfg.n_patches, lspecs.VIT_DIM
+            )
+            assert (toks.shape[1] + cfg.n_patches) == shape.seq_len
+        elif cfg.family == "encdec":
+            assert cell.batch_specs["frames"].shape == (
+                shape.global_batch, cfg.n_audio_frames, cfg.d_model
+            )
+        if cell.kind == "train":
+            assert "labels" in cell.batch_specs
+    else:  # decode
+        tok, pos = cell.token_specs
+        assert tok.shape == (shape.global_batch,)
+        assert pos.shape == ()
+        # cache is abstract — no allocation happened
+        leaves = jax.tree.leaves(cell.cache_specs)
+        assert leaves and all(
+            isinstance(x, jax.ShapeDtypeStruct) for x in leaves
+        )
+        # attention caches sized to seq_len for attention-bearing archs
+        if cfg.family not in ("ssm",):
+            assert any(
+                shape.seq_len in x.shape for x in leaves
+            ), "no cache leaf carries the seq_len capacity"
+
+
+def test_all_cells_enumerate_40():
+    cs = cells()
+    assert len(cs) == 40
+    runnable = [c for c in cs if c[2]]
+    skipped = [c for c in cs if not c[2]]
+    assert len(skipped) == 8  # long_500k × 8 full-attention archs
+    assert all(s == "long_500k" for _, s, ok, _ in cs if not ok)
