@@ -1,0 +1,82 @@
+"""Search-backend benchmark: QPS + distance computations per query.
+
+Runs every registered backend over the 2k-vector synthetic fixture on both
+query topologies (merged ScaleGANN index, split-only shards) and writes
+``BENCH_search.json`` next to the repo root so future PRs have a perf
+trajectory for the serving path.  Jitted backends are warmed on the exact
+query shape first, so QPS measures steady-state serving, not tracing.
+
+    PYTHONPATH=src python benchmarks/bench_search_backends.py
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.configs.base import IndexConfig
+from repro.core import builder
+from repro.data.synthetic import make_clustered, recall_at
+from repro.search import available_backends, search
+
+N_VECTORS = 2000
+N_QUERIES = 256
+WIDTH = 64
+K = 10
+REPEATS = 3
+
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_search.json"
+
+
+def bench_topology(topo_name: str, topo, ds) -> dict:
+    out = {}
+    for backend in available_backends():
+        search(topo, ds.queries, K, backend=backend, width=WIDTH)  # warm
+        best = float("inf")
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            ids, st = search(topo, ds.queries, K, backend=backend,
+                             width=WIDTH)
+            best = min(best, time.perf_counter() - t0)
+        out[backend] = {
+            "qps": len(ds.queries) / best,
+            "latency_s_per_batch": best,
+            "recall_at_10": recall_at(ids, ds.gt, K),
+            "mean_distance_computations_per_query":
+                st.n_distance_computations / len(ds.queries),
+            "mean_hops_per_query": st.n_hops / len(ds.queries),
+        }
+        row = out[backend]
+        print(f"{topo_name:7s} {backend:7s} qps={row['qps']:8.0f} "
+              f"recall@10={row['recall_at_10']:.3f} "
+              f"ndist/q={row['mean_distance_computations_per_query']:.0f}")
+    return out
+
+
+def main() -> dict:
+    ds = make_clustered(N_VECTORS, 32, n_queries=N_QUERIES, spread=1.0,
+                        seed=7)
+    cfg = IndexConfig(n_clusters=4, degree=16, build_degree=32,
+                      block_size=512)
+    merged = builder.build_scalegann(ds.data, cfg, n_workers=2)
+    split = builder.build_extended_cagra(ds.data, cfg, n_workers=2)
+
+    results = {
+        "fixture": {"n_vectors": N_VECTORS, "n_queries": N_QUERIES,
+                    "dim": 32, "width": WIDTH, "k": K},
+        "merged": bench_topology("merged", merged.topology(ds.data), ds),
+        "split": bench_topology("split", split.topology(ds.data), ds),
+    }
+    speedup = (results["merged"]["jax"]["qps"]
+               / results["merged"]["numpy"]["qps"])
+    results["jax_over_numpy_qps"] = speedup
+    print(f"jax/numpy merged QPS: {speedup:.2f}x")
+
+    OUT_PATH.write_text(json.dumps(results, indent=2, sort_keys=True))
+    print(f"wrote {OUT_PATH}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,8 @@ import dataclasses
 
 from repro.configs.base import IndexConfig
 from repro.core.builder import build_scalegann
-from repro.core.search import search_index
 from repro.data.synthetic import recall_at
+from repro.search import search
 
 from benchmarks.common import Rows, dataset
 
@@ -31,7 +31,7 @@ def main() -> Rows:
                 ds.data, dataclasses.replace(base, epsilon=eps), n_workers=2
             )
             tag = f"eps{eps}"
-        ids, st = search_index(ds.data, res.index, ds.queries, 10, width=96)
+        ids, st = search(res.index, ds.queries, 10, data=ds.data, width=96)
         results[tag] = dict(
             proportion=res.stats["replica_proportion"],
             overall_s=res.overall_s,

@@ -9,7 +9,6 @@ DiskANN (CPU) is the slowest builder.
 
 from repro.configs.base import IndexConfig
 from repro.core import builder
-from repro.core.search import search_index, split_search
 from repro.data.synthetic import recall_at
 
 from benchmarks.common import Rows, dataset
@@ -18,14 +17,8 @@ from benchmarks.common import Rows, dataset
 def _search_curve(name, res, ds, rows, widths=(32, 64, 128)):
     out = []
     for w in widths:
-        if res.index is not None:
-            ids, st = search_index(ds.data, res.index, ds.queries, 10,
-                                   width=w)
-        else:
-            ids, st = split_search(
-                ds.data, [s.ids for s in res.shards], res.shard_graphs,
-                ds.queries, 10, width=max(w // 2, 16),
-            )
+        width = w if res.index is not None else max(w // 2, 16)
+        ids, st = res.search(ds.data, ds.queries, 10, width=width)
         r = recall_at(ids, ds.gt, 10)
         nd = st.n_distance_computations / len(ds.queries)
         rows.add(f"{name}.w{w}.recall", r)

@@ -18,8 +18,8 @@ from repro.core.cagra import build_shard_index
 from repro.core.scheduler import (Instance, InstanceType, RuntimeModel,
                                   Scheduler, V100_ONDEMAND, V100_SPOT,
                                   calibrate_runtime, make_tasks)
-from repro.core.search import search_index
 from repro.data.synthetic import make_clustered, recall_at
+from repro.search import search
 
 
 def main():
@@ -66,7 +66,7 @@ def main():
     })
 
     # --- the index still serves ------------------------------------------
-    ids, _ = search_index(ds.data, res.index, ds.queries, 10, width=96)
+    ids, _ = search(res.index, ds.queries, 10, data=ds.data, width=96)
     print(f"recall@10 = {recall_at(ids, ds.gt, 10):.3f}")
 
 

@@ -14,8 +14,8 @@ import numpy as np
 
 from repro.configs.base import IndexConfig, get_arch, smoke_config
 from repro.core.builder import build_scalegann
-from repro.core.search import search_index
 from repro.data.pipeline import TokenPipeline, TokenPipelineConfig
+from repro.search import search
 from repro.data.synthetic import exact_ground_truth, recall_at
 from repro.models.model import build_model
 from repro.train.optimizer import for_config
@@ -59,7 +59,8 @@ def main():
         size=(32, table.shape[1])
     ).astype(np.float32)
     gt = exact_ground_truth(table, queries, 10)
-    ids, stats = search_index(table, res.index, queries, 10, width=96)
+    ids, stats = search(res.index, queries, 10, data=table,
+                        backend="jax", width=96)
     print(f"recall@10 = {recall_at(ids, gt, 10):.3f} "
           f"({stats.n_distance_computations/32:.0f} dists/query)")
     hit1 = np.mean([probe_ids[i] in ids[i] for i in range(32)])

@@ -8,8 +8,8 @@ import numpy as np
 from repro.configs.base import IndexConfig
 from repro.core.builder import build_scalegann
 from repro.core.merge import connectivity_stats
-from repro.core.search import search_index
 from repro.data.synthetic import make_clustered, recall_at
+from repro.search import search
 
 
 def main():
@@ -29,12 +29,15 @@ def main():
           f"(DiskANN uniform would be ~100%)")
     print("connectivity:", connectivity_stats(res.index))
 
-    # 4. CPU serving (paper: queries never touch accelerators)
-    ids, stats = search_index(ds.data, res.index, ds.queries, k=10,
-                              width=96)
-    print(f"recall@10 = {recall_at(ids, ds.gt, 10):.3f}  "
-          f"({stats.n_distance_computations / len(ds.queries):.0f} "
-          f"distance computations / query)")
+    # 4. CPU serving (paper: queries never touch accelerators).  The same
+    #    repro.search call serves any topology with any backend: "numpy" is
+    #    the latency-shaped reference, "jax" the batched throughput engine.
+    for backend in ("numpy", "jax"):
+        ids, stats = search(res.index, ds.queries, k=10, data=ds.data,
+                            backend=backend, width=96)
+        print(f"[{backend}] recall@10 = {recall_at(ids, ds.gt, 10):.3f}  "
+              f"({stats.n_distance_computations / len(ds.queries):.0f} "
+              f"distance computations / query)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
 """ScaleGANN core — the paper's contribution (partition / build / merge /
-search / spot scheduling / cost), in JAX + numpy orchestration."""
+search / spot scheduling / cost), in JAX + numpy orchestration.
+
+Query serving lives in :mod:`repro.search` (backend-pluggable engine); the
+``search_index`` / ``split_search`` names re-exported here are deprecation
+shims kept for one release.
+"""
 
 from repro.core.builder import (  # noqa: F401
     build_diskann,

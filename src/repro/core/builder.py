@@ -49,6 +49,40 @@ class BuildResult:
     def overall_s(self) -> float:
         return self.partition_s + self.wall_build_s + self.merge_s
 
+    def topology(self, data: np.ndarray, *, metric: str = "l2"):
+        """The search topology this build serves: merged systems expose the
+        global graph, split-only systems the shard scatter path."""
+        from repro.search import MergedTopology, ShardTopology
+
+        if self.index is not None:
+            return MergedTopology(data=data, index=self.index, metric=metric)
+        return ShardTopology(
+            data=data,
+            shard_ids=[s.ids for s in self.shards],
+            shard_graphs=self.shard_graphs,
+            metric=metric,
+        )
+
+    def search(
+        self,
+        data: np.ndarray,
+        queries: np.ndarray,
+        k: int,
+        *,
+        backend: str = "numpy",
+        width: int = 64,
+        n_entries: int = 16,
+        metric: str = "l2",
+    ):
+        """Serve queries on this build via :func:`repro.search.search` —
+        the same call works for merged and split-only systems."""
+        from repro.search import search
+
+        return search(
+            self.topology(data, metric=metric), queries, k,
+            backend=backend, width=width, n_entries=n_entries,
+        )
+
 
 def _build_shards(
     data: np.ndarray,
@@ -164,7 +198,7 @@ def build_split_only(
     n_workers: int = 1,
 ) -> BuildResult:
     """Extended CAGRA (kmeans_split=True) / GGNN (False): no replication, no
-    merge; queries must search every shard (core.search.split_search)."""
+    merge; queries must search every shard (repro.search ShardTopology)."""
     shards, partition_s = _split_partition(data, cfg, kmeans=kmeans_split)
     idxs, per_shard_s, wall = _build_shards(
         data, shards, cfg, algo="cagra", n_workers=n_workers

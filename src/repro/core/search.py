@@ -1,225 +1,72 @@
-"""CPU graph search (paper §IV: "delegating long-running, latency-sensitive
-query serving to CPUs").
+"""DEPRECATED — ``repro.core.search`` moved to :mod:`repro.search`.
 
-Implements DiskANN's beam search (the paper's unified query algorithm for all
-four compared systems, §VI-A2) in two flavors:
+This shim keeps the old entry points importable one release longer:
 
-  * ``beam_search``        — single-query numpy best-first search with a
-                              bounded candidate list (search width L).  This
-                              is the latency-shaped serving path; it counts
-                              distance computations and hops (the paper uses
-                              "average number of distances computed as a
-                              proportional proxy for both QPS and latency",
-                              Fig. 5).
-  * ``batch_search``       — vmapped fixed-iteration JAX variant used by the
-                              throughput benchmarks (QPS-shaped: one jit, Q
-                              queries in flight).
+  * ``beam_search``   → :func:`repro.search.beam_search`
+  * ``search_index``  → ``repro.search.search(..., backend="numpy")``
+  * ``split_search``  → ``repro.search.search(..., backend="numpy")``
+  * ``batch_search``  → ``repro.search.search(..., backend="jax")``
+  * ``SearchStats``   → :class:`repro.search.SearchStats`
 
-``split_search`` implements the *split-only* query path (GGNN / Extended
-CAGRA): every shard is searched independently and the per-shard top-k are
-re-ranked — the baseline the paper beats ~3× on latency (Fig. 4/5).
+New code should call :func:`repro.search.search` with an explicit backend.
+Imports are deferred into the wrappers so that ``repro.core`` and
+``repro.search`` can import in either order without a cycle.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.merge import GlobalIndex
+from repro.search.types import SearchStats  # noqa: F401  (re-export)
 
 
-@dataclasses.dataclass
-class SearchStats:
-    n_distance_computations: int = 0
-    n_hops: int = 0
-
-    def __iadd__(self, other: "SearchStats"):
-        self.n_distance_computations += other.n_distance_computations
-        self.n_hops += other.n_hops
-        return self
-
-
-def _dist_rows(data: np.ndarray, ids: np.ndarray, q: np.ndarray) -> np.ndarray:
-    rows = np.asarray(data[ids], np.float32)
-    d = rows - q[None, :]
-    return np.einsum("nd,nd->n", d, d)
-
-
-def beam_search(
-    data: np.ndarray,
-    graph: np.ndarray,
-    entry: int | np.ndarray,
-    query: np.ndarray,
-    k: int,
-    *,
-    width: int = 64,
-    max_hops: int = 10_000,
-) -> tuple[np.ndarray, SearchStats]:
-    """Best-first graph search with candidate list of size ``width`` (>= k).
-
-    Returns (ids [k], stats).  Faithful to DiskANN's GreedySearch: expand the
-    closest unexpanded candidate, add its neighbors, keep the best ``width``.
-
-    ``entry`` may be a single id (DiskANN's medoid) or an array of ids —
-    CAGRA seeds its search with multiple random entry points, which is what
-    makes a merged *kNN* graph (local edges only, unlike Vamana's long-range
-    edges) navigable; ``GlobalIndex.entry_points`` provides them.
-    """
-    q = np.asarray(query, np.float32)
-    stats = SearchStats()
-    entries = np.atleast_1d(np.asarray(entry, np.int64))
-    visited: set[int] = set(entries.tolist())
-    d0s = _dist_rows(data, entries, q)
-    stats.n_distance_computations += len(entries)
-    # candidate list: (dist, id)
-    cand: list[tuple[float, int]] = list(
-        zip(d0s.tolist(), entries.tolist())
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.search.{old} is deprecated; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
     )
-    expanded: set[int] = set()
-    best: list[tuple[float, int]] = list(cand)
-    while stats.n_hops < max_hops:
-        # closest unexpanded candidate within the best `width`
-        cand.sort()
-        cand = cand[:width]
-        nxt = None
-        for d, v in cand:
-            if v not in expanded:
-                nxt = v
-                break
-        if nxt is None:
-            break
-        expanded.add(nxt)
-        stats.n_hops += 1
-        nbrs = graph[nxt]
-        nbrs = nbrs[(nbrs >= 0)]
-        fresh = np.asarray([v for v in nbrs.tolist() if v not in visited],
-                           np.int64)
-        if fresh.size:
-            visited.update(fresh.tolist())
-            ds = _dist_rows(data, fresh, q)
-            stats.n_distance_computations += int(fresh.size)
-            cand.extend(zip(ds.tolist(), fresh.tolist()))
-            best.extend(zip(ds.tolist(), fresh.tolist()))
-    best = heapq.nsmallest(k, set(best))
-    ids = np.asarray([v for _, v in best], np.int64)
-    return ids, stats
 
 
-def search_index(
-    data: np.ndarray,
-    index: GlobalIndex,
-    queries: np.ndarray,
-    k: int,
-    *,
-    width: int = 64,
-    n_entries: int = 16,
-) -> tuple[np.ndarray, SearchStats]:
-    """Serve a query batch on the merged index (one CPU 'server')."""
-    out = np.full((len(queries), k), -1, np.int64)
-    stats = SearchStats()
-    entries = index.entry_points(n_entries) if n_entries > 1 else index.medoid
-    for i, q in enumerate(np.asarray(queries, np.float32)):
-        ids, s = beam_search(data, index.graph, entries, q, k, width=width)
-        out[i, : len(ids)] = ids
-        stats += s
-    return out, stats
+def beam_search(data, graph, entry, query, k, *, width: int = 64,
+                max_hops: int = 10_000):
+    _warn("beam_search", "repro.search.beam_search")
+    from repro.search import beam_search as impl
+
+    return impl(data, graph, entry, query, k, width=width, max_hops=max_hops)
 
 
-def split_search(
-    data: np.ndarray,
-    shard_ids: list[np.ndarray],
-    shard_graphs: list[np.ndarray],
-    queries: np.ndarray,
-    k: int,
-    *,
-    width: int = 64,
-) -> tuple[np.ndarray, SearchStats]:
-    """Split-only query path (GGNN / Extended CAGRA, §VI): search every shard
-    independently, then merge + re-rank the per-shard top-k."""
-    qs = np.asarray(queries, np.float32)
-    out = np.full((len(qs), k), -1, np.int64)
-    stats = SearchStats()
-    for i, q in enumerate(qs):
-        pool: list[tuple[float, int]] = []
-        for ids, graph in zip(shard_ids, shard_graphs):
-            if len(ids) == 0:
-                continue
-            local, s = beam_search(
-                np.asarray(data[ids]), graph, 0, q, min(k, len(ids)),
-                width=width,
-            )
-            stats += s
-            gd = _dist_rows(data, ids[local], q)
-            stats.n_distance_computations += len(local)
-            pool.extend(zip(gd.tolist(), ids[local].tolist()))
-        top = heapq.nsmallest(k, set(pool))
-        ids_out = np.asarray([v for _, v in top], np.int64)
-        out[i, : len(ids_out)] = ids_out
-    return out, stats
+def search_index(data, index, queries, k, *, width: int = 64,
+                 n_entries: int = 16):
+    _warn("search_index", 'repro.search.search(..., backend="numpy")')
+    from repro.search import search
+
+    return search(index, queries, k, data=data, backend="numpy",
+                  width=width, n_entries=n_entries)
 
 
-# ---------------------------------------------------------------------------
-# Batched JAX search (throughput path)
-# ---------------------------------------------------------------------------
+def split_search(data, shard_ids, shard_graphs, queries, k, *,
+                 width: int = 64):
+    _warn("split_search", 'repro.search.search(..., backend="numpy")')
+    from repro.search import search
+
+    return search((shard_ids, shard_graphs), queries, k, data=data,
+                  backend="numpy", width=width)
 
 
-def batch_search(
-    data: np.ndarray,
-    index: GlobalIndex,
-    queries: np.ndarray,
-    k: int,
-    *,
-    width: int = 64,
-    n_iters: int = 48,
-) -> np.ndarray:
-    """Fixed-iteration vmapped beam search: every query expands its current
-    best unexpanded candidate each iteration (`jax.lax` control flow, no
-    host round-trips).  Throughput-shaped: one jit serves the whole batch."""
-    x = jnp.asarray(np.asarray(data, np.float32))
-    graph = jnp.asarray(index.graph, jnp.int32)
-    q = jnp.asarray(np.asarray(queries, np.float32))
-    r = graph.shape[1]
+def batch_search(data, index, queries, k, *, width: int = 64,
+                 n_iters: int | None = None):
+    """Old medoid-seeded fixed-iteration batch search; now the ``jax``
+    backend (multi-entry seeding, early exit).  Returns ids only, like the
+    original."""
+    _warn("batch_search", 'repro.search.search(..., backend="jax")')
+    from repro.search.jax_backend import batch_beam_search
 
-    def one(qv):
-        def dist(ids):
-            rows = x[ids]
-            d = rows - qv[None, :]
-            return jnp.einsum("nd,nd->n", d, d)
-
-        cand_ids = jnp.full((width,), -1, jnp.int32).at[0].set(index.medoid)
-        cand_d = jnp.full((width,), jnp.inf, jnp.float32).at[0].set(
-            dist(jnp.asarray([index.medoid], jnp.int32))[0]
-        )
-        cand_exp = jnp.zeros((width,), bool)
-
-        def body(_, state):
-            ids, ds, exp = state
-            # pick closest unexpanded
-            masked = jnp.where(exp | (ids < 0), jnp.inf, ds)
-            j = jnp.argmin(masked)
-            exp = exp.at[j].set(True)
-            v = ids[j]
-            nbrs = jnp.where(v >= 0, graph[jnp.maximum(v, 0)],
-                             jnp.full((r,), -1, jnp.int32))
-            nd = jnp.where(nbrs >= 0, dist(jnp.maximum(nbrs, 0)), jnp.inf)
-            # drop duplicates of existing candidates
-            dup = (nbrs[:, None] == ids[None, :]).any(axis=1)
-            nd = jnp.where(dup, jnp.inf, nd)
-            all_ids = jnp.concatenate([ids, nbrs])
-            all_d = jnp.concatenate([ds, nd])
-            all_exp = jnp.concatenate([exp, jnp.zeros((r,), bool)])
-            order = jnp.argsort(all_d)[:width]
-            return all_ids[order], all_d[order], all_exp[order]
-
-        ids, ds, _ = jax.lax.fori_loop(
-            0, n_iters, body, (cand_ids, cand_d, cand_exp)
-        )
-        order = jnp.argsort(ds)[:k]
-        return ids[order]
-
-    fn = jax.jit(jax.vmap(one))
-    return np.asarray(fn(q), np.int64)
+    entries = index.entry_points(16)
+    ids, _, _ = batch_beam_search(
+        np.asarray(data), index.graph, entries, queries, k,
+        width=width, n_iters=n_iters,
+    )
+    return ids

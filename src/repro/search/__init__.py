@@ -1,0 +1,35 @@
+"""``repro.search`` — the unified, backend-pluggable query engine.
+
+One public API, :func:`search`, serves every query topology in the repo
+(merged ScaleGANN/DiskANN index, split-only shard scatter/re-rank, and the
+retrieval-attention inner-product path) on any registered backend:
+
+  * ``numpy``  — reference; exact DiskANN GreedySearch semantics + stats;
+  * ``jax``    — vmapped batched beam search, multi-entry seeding,
+                 sorted-merge dedup, convergence early-exit;
+  * ``pallas`` — traversal in JAX, distance tiles + running top-k staged
+                 through ``repro.kernels`` (interpret mode off-TPU).
+
+Replaces the four divergent implementations that used to live in
+``repro.core.search`` (now a deprecation shim) and
+``repro.serve.retrieval_attention._ip_search``.
+"""
+
+from repro.search.api import (SearchBackend, available_backends,  # noqa: F401
+                              get_backend, register_backend, search)
+from repro.search.numpy_backend import beam_search  # noqa: F401
+from repro.search.types import (MergedTopology, SearchStats,  # noqa: F401
+                                ShardTopology, as_topology)
+
+__all__ = [
+    "search",
+    "SearchBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "beam_search",
+    "SearchStats",
+    "MergedTopology",
+    "ShardTopology",
+    "as_topology",
+]

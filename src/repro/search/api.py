@@ -1,0 +1,118 @@
+"""Backend registry + the one public query entry point, ``search``.
+
+Every query topology the repo serves (merged ScaleGANN/DiskANN index,
+split-only shard scatter, retrieval-attention inner-product) goes through
+this function; backends plug in behind a small protocol so future scaling
+work (GPU-resident serving, async batching, query routing) lands as a new
+backend, not a new call-site convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+                                as_topology)
+
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """A search engine implementation.
+
+    Both methods return ``(ids [Q, k] int64, SearchStats)``; unused result
+    slots are -1.  Modules satisfy this protocol (the built-ins are plain
+    modules exposing the two functions).
+    """
+
+    def search_merged(
+        self, topo: MergedTopology, queries: np.ndarray, k: int, *,
+        width: int, n_entries: int,
+    ) -> tuple[np.ndarray, SearchStats]: ...
+
+    def search_split(
+        self, topo: ShardTopology, queries: np.ndarray, k: int, *,
+        width: int, n_entries: int,
+    ) -> tuple[np.ndarray, SearchStats]: ...
+
+
+# name -> backend object, or a module path string resolved lazily (keeps
+# `import repro.search` from paying jax tracing costs for unused backends)
+_REGISTRY: dict[str, SearchBackend | str] = {
+    "numpy": "repro.search.numpy_backend",
+    "jax": "repro.search.jax_backend",
+    "pallas": "repro.search.pallas_backend",
+}
+
+
+def register_backend(name: str, backend: SearchBackend) -> None:
+    """Register (or replace) a backend under ``name``."""
+    if not isinstance(backend, SearchBackend):
+        raise TypeError(
+            "backend must expose search_merged and search_split"
+        )
+    _REGISTRY[name] = backend
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str) -> SearchBackend:
+    try:
+        entry = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown search backend {name!r}; available: "
+            f"{available_backends()}"
+        ) from None
+    if isinstance(entry, str):
+        entry = importlib.import_module(entry)
+        _REGISTRY[name] = entry
+    return entry
+
+
+def search(
+    index_or_shards,
+    queries: np.ndarray,
+    k: int,
+    *,
+    backend: str = "numpy",
+    width: int = 64,
+    n_entries: int = 16,
+    data: np.ndarray | None = None,
+    metric: str | None = None,
+) -> tuple[np.ndarray, SearchStats]:
+    """Serve a query batch on any topology with any registered backend.
+
+    ``index_or_shards`` — a :class:`MergedTopology` / :class:`ShardTopology`,
+    a bare :class:`~repro.core.merge.GlobalIndex` (pass ``data``), or a
+    ``(shard_ids, shard_graphs)`` pair (pass ``data``).
+
+    ``backend`` — ``"numpy"`` (reference, exact DiskANN GreedySearch
+    semantics), ``"jax"`` (vmapped batched beam, throughput-shaped) or
+    ``"pallas"`` (kernel-staged distances/top-k, interpret-mode off-TPU).
+
+    Returns ``(ids [Q, k] int64, SearchStats)``.
+    """
+    if width < k:
+        raise ValueError(
+            f"width ({width}) must be >= k ({k}): the candidate list bounds "
+            "how many results a beam search can return"
+        )
+    topo = as_topology(index_or_shards, data, metric=metric or "l2")
+    if metric is not None and topo.metric != metric:
+        # never mutate a caller-owned topology object
+        topo = dataclasses.replace(topo, metric=metric)
+    impl = get_backend(backend)
+    queries = np.asarray(queries, np.float32)
+    if isinstance(topo, MergedTopology):
+        return impl.search_merged(
+            topo, queries, k, width=width, n_entries=n_entries
+        )
+    return impl.search_split(
+        topo, queries, k, width=width, n_entries=n_entries
+    )

@@ -1,0 +1,226 @@
+"""Kernel-staged backend: JAX graph traversal + Pallas distance / top-k.
+
+The BANG/PilotANN architecture split, on TPU terms: graph traversal (gather
+neighbor ids, pick the next node to expand) is cheap and stays in plain
+JAX; the numeric stages run through the repo's Pallas kernels —
+
+  * **Seeding** — the (Q, E) query×entry-point distance tile is computed by
+    ``kernels.distance.pairwise_distance_pallas`` (MXU block matmul +
+    fused norm correction), interpret-mode off-TPU;
+  * **Running top-k** — each query's candidate list is maintained by
+    ``kernels.topk.merge_topk``, the same VREG-lane bitonic
+    compare-exchange network the fused kNN kernel uses in VMEM (no
+    ``argsort`` primitive in the hot loop);
+  * **Neighbor scoring** — the per-iteration (Q, R) gathered tile uses the
+    kernel's exact MXU formulation (``dot_general`` + norm correction) on
+    contiguous gathered rows.
+
+Unlike the ``jax`` backend's candidate-list dedup, this backend keeps true
+*visited-set* semantics with per-query (Q, N+1) bitmaps (column N is a spill
+slot for masked scatters) — exact parity with the numpy reference's
+counting, at O(Q·N) bits of state: the right trade at serving batch sizes,
+and the structure a future TPU-resident engine keeps in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.distance import pairwise_distance_pallas
+from repro.kernels.topk import merge_topk
+from repro.search.jax_backend import default_n_iters
+from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+                                run_merged, run_split)
+
+_LANE = 128
+
+
+def _pad_to(a: jax.Array, axis: int, multiple: int, value) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _seed_distances(
+    queries: jax.Array, seeds: jax.Array, metric: str, interpret: bool
+) -> jax.Array:
+    """(Q, E) distance tile via the Pallas pairwise kernel, padded to the
+    MXU block grid."""
+    nq, ne = queries.shape[0], seeds.shape[0]
+    qp = _pad_to(_pad_to(queries, 1, _LANE, 0.0), 0, _LANE, 0.0)
+    sp = _pad_to(_pad_to(seeds, 1, _LANE, 0.0), 0, _LANE, 0.0)
+    out = pairwise_distance_pallas(
+        qp, sp, metric=metric, block_m=_LANE, block_n=_LANE,
+        interpret=interpret,
+    )
+    return out[:nq, :ne]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "width", "n_iters", "metric")
+)
+def _traverse(
+    x: jax.Array,  # [N, D] f32
+    graph: jax.Array,  # [N, R] int32
+    entries: jax.Array,  # [E] int32
+    queries: jax.Array,  # [Q, D] f32
+    seed_d: jax.Array,  # [Q, E] from the pallas kernel
+    k: int,
+    width: int,
+    n_iters: int,
+    metric: str,
+):
+    n, _ = x.shape
+    r = graph.shape[1]
+    nq = queries.shape[0]
+    ne = entries.shape[0]
+    sentinel = jnp.int32(n)
+    rows_q = jnp.arange(nq)
+
+    # candidate lists start as the seeds, bitonic-sorted ascending
+    pad_v = jnp.full((nq, width), jnp.inf, jnp.float32)
+    pad_i = jnp.full((nq, width), sentinel, jnp.int32)
+    cand_d, cand_ids = merge_topk(
+        pad_v, pad_i,
+        seed_d, jnp.broadcast_to(entries[None, :], (nq, ne)),
+        width,
+    )
+    # visited/expanded bitmaps; column N absorbs masked scatter writes
+    seen = jnp.zeros((nq, n + 1), bool)
+    seen = seen.at[rows_q[:, None], jnp.broadcast_to(
+        entries[None, :], (nq, ne))].set(True)
+    expanded = jnp.zeros((nq, n + 1), bool)
+    n_dist = jnp.full((nq,), ne, jnp.int32)  # seeds were scored
+    hops = jnp.zeros((nq,), jnp.int32)
+    done = jnp.zeros((nq,), bool)
+
+    def score_tile(nbrs):
+        """(Q, R) distances, kernel formulation: dot_general + norms."""
+        rows = x[nbrs]  # [Q, R, D]
+        dots = jax.lax.dot_general(
+            queries, rows, (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # [Q, R]
+        if metric == "ip":
+            return -dots
+        qn = jnp.sum(queries * queries, axis=1, keepdims=True)
+        xn = jnp.sum(rows * rows, axis=2)
+        return jnp.maximum(qn + xn - 2.0 * dots, 0.0)
+
+    def cond(state):
+        *_, done = state
+        return (~done).any()
+
+    def body(state):
+        cand_d, cand_ids, seen, expanded, n_dist, hops, it, done = state
+        safe_ids = jnp.clip(cand_ids, 0, sentinel)
+        exp_flags = jnp.take_along_axis(expanded, safe_ids, axis=1)
+        # merge_topk pads with id -1 / dist inf; treat any non-real id as
+        # expanded so it is never selected
+        exp_flags = exp_flags | (cand_ids >= sentinel) | (cand_ids < 0)
+        masked = jnp.where(exp_flags, jnp.inf, cand_d)
+        j = jnp.argmin(masked, axis=1)  # [Q]
+        converged = ~jnp.isfinite(
+            jnp.take_along_axis(masked, j[:, None], axis=1)[:, 0]
+        )
+        halt = done | converged
+        v = jnp.take_along_axis(cand_ids, j[:, None], axis=1)[:, 0]
+        v = jnp.where(halt, sentinel, jnp.minimum(v, sentinel))
+        expanded = expanded.at[rows_q, v].set(True)
+
+        nbrs = graph[jnp.clip(v, 0, n - 1)]  # [Q, R]
+        valid = (nbrs >= 0) & ~halt[:, None]
+        safe_nbrs = jnp.where(valid, nbrs, 0)
+        was_seen = jnp.take_along_axis(seen, safe_nbrs, axis=1)
+        fresh = valid & ~was_seen
+        nd = jnp.where(fresh, score_tile(safe_nbrs), jnp.inf)
+        seen = seen.at[
+            rows_q[:, None], jnp.where(fresh, nbrs, sentinel)
+        ].set(True)
+
+        # running top-k through the kernel's bitonic merge network
+        new_d, new_ids = merge_topk(
+            cand_d, cand_ids,
+            nd, jnp.where(fresh, nbrs, sentinel), width,
+        )
+        n_dist = n_dist + jnp.where(
+            halt, 0, fresh.sum(axis=1)
+        ).astype(jnp.int32)
+        hops = hops + jnp.where(halt, 0, 1).astype(jnp.int32)
+        done = done | converged | (it + 1 >= n_iters)
+        return new_d, new_ids, seen, expanded, n_dist, hops, it + 1, done
+
+    state = (cand_d, cand_ids, seen, expanded, n_dist, hops,
+             jnp.int32(0), done)
+    cand_d, cand_ids, _, _, n_dist, hops, _, _ = jax.lax.while_loop(
+        cond, body, state
+    )
+    # merge_topk keeps lists ascending — the head is the top-k
+    out_ids = jnp.where(cand_ids[:, :k] >= sentinel, -1, cand_ids[:, :k])
+    return out_ids, cand_d[:, :k], n_dist, hops
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kernel_beam_search(
+    data: np.ndarray,
+    graph: np.ndarray,
+    entries,
+    queries: np.ndarray,
+    k: int,
+    *,
+    width: int = 64,
+    n_iters: int | None = None,
+    metric: str = "l2",
+) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    n_iters = default_n_iters(width) if n_iters is None else n_iters
+    e = np.atleast_1d(np.asarray(entries, np.int64))[:width].astype(np.int32)
+    x = jnp.asarray(np.asarray(data, np.float32))
+    q = jnp.asarray(np.asarray(queries, np.float32))
+    ej = jnp.asarray(e)
+    seed_d = _seed_distances(q, x[ej], metric, _interpret())
+    ids, ds, n_dist, hops = _traverse(
+        x, jnp.asarray(np.asarray(graph), jnp.int32), ej, q, seed_d,
+        k, width, n_iters, metric,
+    )
+    stats = SearchStats(
+        n_distance_computations=int(np.asarray(n_dist).sum()),
+        n_hops=int(np.asarray(hops).sum()),
+    )
+    return np.asarray(ids, np.int64), np.asarray(ds), stats
+
+
+def search_merged(
+    topo: MergedTopology,
+    queries: np.ndarray,
+    k: int,
+    *,
+    width: int = 64,
+    n_entries: int = 16,
+    n_iters: int | None = None,
+) -> tuple[np.ndarray, SearchStats]:
+    return run_merged(kernel_beam_search, topo, queries, k, width=width,
+                      n_entries=n_entries, n_iters=n_iters)
+
+
+def search_split(
+    topo: ShardTopology,
+    queries: np.ndarray,
+    k: int,
+    *,
+    width: int = 64,
+    n_entries: int = 16,  # unused: shard searches seed from local row 0
+    n_iters: int | None = None,
+) -> tuple[np.ndarray, SearchStats]:
+    return run_split(kernel_beam_search, topo, queries, k, width=width,
+                     n_iters=n_iters)

@@ -1,0 +1,166 @@
+"""Shared types for the unified search engine.
+
+The engine serves three query topologies behind one API (paper §IV: CPUs own
+"long-running, latency-sensitive query serving"; §VI-A2: all four compared
+systems answer queries with the same beam search):
+
+  * :class:`MergedTopology`   — one global graph (ScaleGANN / DiskANN after
+                                 the edge-union merge).
+  * :class:`ShardTopology`    — split-only shard scatter + global re-rank
+                                 (GGNN / Extended CAGRA, no merge step).
+
+Both carry their vectors and metric so a backend gets everything it needs
+from a single object, and ``as_topology`` adapts the loose
+``(data, index)`` / ``(data, shard_ids, shard_graphs)`` calling conventions
+of the old ``core.search`` module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import numpy as np
+
+if typing.TYPE_CHECKING:  # import-time independence from repro.core
+    from repro.core.merge import GlobalIndex
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """The paper's latency/QPS proxy (Fig. 5): distance computations + hops."""
+
+    n_distance_computations: int = 0
+    n_hops: int = 0
+
+    def __iadd__(self, other: "SearchStats"):
+        self.n_distance_computations += other.n_distance_computations
+        self.n_hops += other.n_hops
+        return self
+
+
+@dataclasses.dataclass
+class MergedTopology:
+    """Merged global graph + its vectors (ScaleGANN / DiskANN serving)."""
+
+    data: np.ndarray  # [N, D]
+    index: GlobalIndex
+    metric: str = "l2"
+
+
+@dataclasses.dataclass
+class ShardTopology:
+    """Split-only shards: every query searches every shard, then re-ranks."""
+
+    data: np.ndarray  # [N, D] global vectors
+    shard_ids: list  # list of [n_i] int64 global ids
+    shard_graphs: list  # list of [n_i, R] int32 local graphs
+    metric: str = "l2"
+
+
+Topology = MergedTopology | ShardTopology
+
+
+def as_topology(index_or_shards, data=None, *, metric: str = "l2") -> Topology:
+    """Adapt the accepted input forms to a topology object.
+
+    ``index_or_shards`` may already be a topology, a :class:`GlobalIndex`
+    (requires ``data``), or a ``(shard_ids, shard_graphs)`` pair (requires
+    ``data``).
+    """
+    from repro.core.merge import GlobalIndex  # deferred: avoids an import
+    # cycle (repro.core.search re-exports from repro.search)
+
+    if isinstance(index_or_shards, (MergedTopology, ShardTopology)):
+        return index_or_shards
+    if isinstance(index_or_shards, GlobalIndex):
+        if data is None:
+            raise ValueError("data is required with a bare GlobalIndex")
+        return MergedTopology(data=data, index=index_or_shards, metric=metric)
+    if (
+        isinstance(index_or_shards, tuple)
+        and len(index_or_shards) == 2
+        and isinstance(index_or_shards[0], (list, tuple))
+    ):
+        ids, graphs = index_or_shards
+        if data is None:
+            raise ValueError("data is required with a (ids, graphs) pair")
+        return ShardTopology(
+            data=data, shard_ids=list(ids), shard_graphs=list(graphs),
+            metric=metric,
+        )
+    raise TypeError(
+        f"cannot interpret {type(index_or_shards).__name__} as a search "
+        "topology; pass a MergedTopology, ShardTopology, GlobalIndex, or "
+        "(shard_ids, shard_graphs)"
+    )
+
+
+def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
+               width: int, n_entries: int, n_iters: int | None = None):
+    """Shared merged-topology driver for the batched backends.
+
+    ``beam_fn(data, graph, entries, queries, k, *, width, n_iters, metric)``
+    must return ``(ids, dists, SearchStats)``.
+    """
+    entries = (
+        topo.index.entry_points(n_entries) if n_entries > 1
+        else np.asarray([topo.index.medoid])
+    )
+    ids, _, stats = beam_fn(
+        topo.data, topo.index.graph, entries, queries, k,
+        width=width, n_iters=n_iters, metric=topo.metric,
+    )
+    return ids, stats
+
+
+def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
+              width: int, n_iters: int | None = None):
+    """Shared split-topology driver: shard scatter + global re-rank.
+
+    Per-shard beam scores are exact, so the re-rank reuses them — no extra
+    distance computations (the old split path double-counted these).  Shard
+    searches seed from local row 0 (reference parity).
+    """
+    nq = len(queries)
+    stats = SearchStats()
+    pool_ids: list[np.ndarray] = []
+    pool_d: list[np.ndarray] = []
+    for ids, g in zip(topo.shard_ids, topo.shard_graphs):
+        if len(ids) == 0:
+            continue
+        local, ld, s = beam_fn(
+            np.asarray(topo.data[ids]), g, 0, queries, min(k, len(ids)),
+            width=width, n_iters=n_iters, metric=topo.metric,
+        )
+        stats += s
+        gids = np.where(local >= 0, ids[np.maximum(local, 0)], -1)
+        pool_ids.append(gids)
+        pool_d.append(np.where(local >= 0, ld, np.inf))
+    return rerank_shard_pools(pool_ids, pool_d, k, nq), stats
+
+
+def rerank_shard_pools(
+    pool_ids: list[np.ndarray],  # per shard [Q, k_shard] global ids (-1 pad)
+    pool_d: list[np.ndarray],  # per shard [Q, k_shard] exact scores (inf pad)
+    k: int,
+    nq: int,
+) -> np.ndarray:
+    """Global re-rank for the split topology, shared by the batched
+    backends: dedup by id (replicated vectors appear in several shards,
+    keep the closest copy) and take the k best per query.  Scores were
+    already computed — and counted — by the in-shard searches, so this adds
+    no distance computations."""
+    out = np.full((nq, k), -1, np.int64)
+    if not pool_ids:
+        return out
+    cat_ids = np.concatenate(pool_ids, axis=1)  # [Q, Σ k_shard]
+    cat_d = np.concatenate(pool_d, axis=1)
+    for i in range(nq):
+        seen: dict[int, float] = {}
+        for gid, d in zip(cat_ids[i].tolist(), cat_d[i].tolist()):
+            if gid >= 0 and (gid not in seen or d < seen[gid]):
+                seen[gid] = d
+        top = sorted(seen.items(), key=lambda kv: (kv[1], kv[0]))[:k]
+        out[i, : len(top)] = [gid for gid, _ in top]
+    return out

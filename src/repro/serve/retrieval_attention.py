@@ -5,9 +5,12 @@ long-context LLM decode spends its time scoring a query against an enormous
 KV cache, but the softmax is dominated by a few high-inner-product keys —
 exactly a top-k ANN query.  This module closes the loop with the paper's
 own machinery: a **ScaleGANN graph index is built over the cached keys**
-(inner-product metric), and each decode step runs the paper's CPU beam
-search instead of a dense S-length score — the same build-on-accelerator /
-serve-on-CPU split, applied to attention itself.
+(inner-product metric), and each decode step queries the unified
+:mod:`repro.search` engine (``metric="ip"``) instead of a dense S-length
+score — the same build-on-accelerator / serve-on-CPU split, applied to
+attention itself.  The engine's backends apply here too: ``numpy`` for
+latency-shaped single-token decode, ``jax``/``pallas`` once decode queries
+are batched.
 
     full attention:   O(T·dh) per head per token
     retrieval:        O(width·R·dh) graph search + O((top_t+window)·dh) softmax
@@ -27,7 +30,7 @@ import numpy as np
 from repro.configs.base import IndexConfig
 from repro.core.builder import build_scalegann
 from repro.core.merge import GlobalIndex
-from repro.core.search import beam_search
+from repro.search import MergedTopology, search
 
 
 @dataclasses.dataclass
@@ -37,6 +40,9 @@ class KeyIndex:
     keys: np.ndarray  # [T, dh] f32
     values: np.ndarray  # [T, dh] f32
     index: GlobalIndex
+
+    def topology(self) -> MergedTopology:
+        return MergedTopology(data=self.keys, index=self.index, metric="ip")
 
 
 def build_key_indexes(
@@ -78,6 +84,8 @@ def retrieval_decode_attention(
     width: int = 64,
     scale: float | None = None,
     exact_search: bool = False,  # brute-force top-k (tests/upper bound)
+    backend: str = "numpy",
+    n_entries: int = 8,
 ) -> tuple[np.ndarray, dict]:
     """One-token attention approximated by ANN retrieval over the key cache.
 
@@ -97,11 +105,20 @@ def retrieval_decode_attention(
             if exact_search:
                 sc = ki.keys @ qv
                 ids = np.argsort(-sc)[: min(top_t, t)]
-                st = t
+                n_dist += t
             else:
-                # graph search, inner-product scoring (larger = closer)
-                ids, st = _ip_search(ki, qv, min(top_t, t), width)
-            n_dist += st
+                # the unified engine, inner-product metric (larger = closer);
+                # the candidate list must cover top_t (engine contract
+                # width >= k)
+                kk = min(top_t, t)
+                ids_row, st = search(
+                    ki.topology(), qv[None, :], kk,
+                    backend=backend, width=max(width, kk),
+                    n_entries=n_entries,
+                )
+                ids = ids_row[0]
+                ids = ids[ids >= 0]
+                n_dist += st.n_distance_computations
             recent = np.arange(max(0, t - window), t)
             sinks = np.arange(min(n_sink, t))
             sel = np.unique(np.concatenate([ids, recent, sinks]))
@@ -110,37 +127,6 @@ def retrieval_decode_attention(
             w /= w.sum()
             out[bi, hi] = w @ ki.values[sel]
     return out, {"n_distance_computations": n_dist}
-
-
-def _ip_search(ki: KeyIndex, qv: np.ndarray, k: int, width: int):
-    """Beam search with inner-product scoring over the key graph."""
-    graph = ki.index.graph
-    entries = ki.index.entry_points(8)
-    visited = set(entries.tolist())
-    scores = ki.keys[entries] @ qv
-    n_dist = len(entries)
-    cand = list(zip((-scores).tolist(), entries.tolist()))
-    expanded: set[int] = set()
-    best = list(cand)
-    while True:
-        cand.sort()
-        cand = cand[:width]
-        nxt = next((v for d, v in cand if v not in expanded), None)
-        if nxt is None:
-            break
-        expanded.add(nxt)
-        nbrs = graph[nxt]
-        fresh = [v for v in nbrs[nbrs >= 0].tolist() if v not in visited]
-        if fresh:
-            visited.update(fresh)
-            sc = ki.keys[np.asarray(fresh)] @ qv
-            n_dist += len(fresh)
-            cand.extend(zip((-sc).tolist(), fresh))
-            best.extend(zip((-sc).tolist(), fresh))
-    import heapq
-
-    top = heapq.nsmallest(k, set(best))
-    return np.asarray([v for _, v in top], np.int64), n_dist
 
 
 def full_decode_attention_ref(q, k_cache, v_cache, scale=None):

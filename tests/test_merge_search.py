@@ -8,8 +8,8 @@ from repro.core import builder, cagra
 from repro.core.merge import (BufferedShardReader, connectivity_stats,
                               merge_shard_indexes)
 from repro.core.partition import Shard, partition
-from repro.core.search import batch_search, search_index, split_search
 from repro.data.synthetic import make_clustered, recall_at
+from repro.search import search
 
 
 @pytest.fixture(scope="module")
@@ -60,7 +60,7 @@ def test_merged_graph_connectivity(built):
 
 
 def test_merged_recall(ds, built):
-    ids, st = search_index(ds.data, built.index, ds.queries, 10, width=128)
+    ids, st = search(built.index, ds.queries, 10, data=ds.data, width=128)
     r = recall_at(ids, ds.gt, 10)
     assert r > 0.85, f"recall {r}"
     assert st.n_distance_computations > 0
@@ -69,13 +69,10 @@ def test_merged_recall(ds, built):
 def test_merged_beats_split_distance_budget(ds, cfg, built):
     """Paper Fig 4/5: at comparable recall the merged index needs several×
     fewer distance computations than split-only search."""
-    ids_m, st_m = search_index(ds.data, built.index, ds.queries, 10,
-                               width=128)
+    ids_m, st_m = search(built.index, ds.queries, 10, data=ds.data,
+                         width=128)
     ec = builder.build_extended_cagra(ds.data, cfg)
-    ids_s, st_s = split_search(
-        ds.data, [s.ids for s in ec.shards], ec.shard_graphs, ds.queries, 10,
-        width=64,
-    )
+    ids_s, st_s = ec.search(ds.data, ds.queries, 10, width=64)
     r_m = recall_at(ids_m, ds.gt, 10)
     r_s = recall_at(ids_s, ds.gt, 10)
     assert r_m >= r_s - 0.05  # comparable recall...
@@ -86,15 +83,26 @@ def test_merged_beats_split_distance_budget(ds, cfg, built):
 
 
 def test_batch_search_matches_serial(ds, built):
-    ids_b = batch_search(ds.data, built.index, ds.queries[:8], 10,
-                         width=64, n_iters=64)
-    ids_s, _ = search_index(ds.data, built.index, ds.queries[:8], 10,
-                            width=64)
+    ids_b, _ = search(built.index, ds.queries[:8], 10, data=ds.data,
+                      backend="jax", width=64)
+    ids_s, _ = search(built.index, ds.queries[:8], 10, data=ds.data,
+                      backend="numpy", width=64)
     # same top-1 for most queries (tie-breaking may differ)
     agree = np.mean([
         len(set(a[:10]) & set(b[:10])) / 10 for a, b in zip(ids_b, ids_s)
     ])
     assert agree > 0.7
+
+
+def test_deprecated_core_search_shim(ds, built):
+    """Old entry points still work (one release of back-compat)."""
+    from repro.core.search import search_index
+
+    with pytest.warns(DeprecationWarning):
+        ids, st = search_index(ds.data, built.index, ds.queries[:4], 10,
+                               width=64)
+    ids_n, _ = search(built.index, ds.queries[:4], 10, data=ds.data)
+    np.testing.assert_array_equal(ids, ids_n)
 
 
 def test_buffered_reader_state_check():
@@ -116,7 +124,7 @@ def test_vamana_build_and_search(ds):
     gt = ds.gt  # gt computed over full data; recompute for subset
     from repro.data.synthetic import exact_ground_truth
     gt = exact_ground_truth(ds.data[:600], ds.queries, 10)
-    ids, _ = search_index(ds.data[:600], res.index, ds.queries, 10,
-                          width=128)
+    ids, _ = search(res.index, ds.queries, 10, data=ds.data[:600],
+                    width=128)
     r = recall_at(ids, gt, 10)
     assert r > 0.8, f"vamana recall {r}"

@@ -1,15 +1,65 @@
-"""Property tests for adaptive partitioning + selective replication (§V)."""
+"""Property tests for adaptive partitioning + selective replication (§V).
+
+The property tests run under hypothesis when it is installed
+(``requirements-dev.txt``); without it they degrade to seeded
+numpy-random example tests so the suite still collects and exercises the
+same invariants (fewer, fixed draws instead of shrinking search).
+"""
 
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 import repro.core.partition as pt
 from repro.configs.base import IndexConfig
 from repro.core.kmeans import train_centroids
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade, don't abort collection
+    HAVE_HYPOTHESIS = False
+
+
+def fuzz(max_examples: int, **ranges):
+    """``@fuzz(n=("int", lo, hi), eps=("float", lo, hi), ...)``.
+
+    With hypothesis: a ``@given`` property test over the ranges.  Without:
+    ``pytest.mark.parametrize`` over ``max_examples`` seeded random draws
+    from the same ranges (deterministic across runs).
+    """
+    if HAVE_HYPOTHESIS:
+        strats = {
+            name: (st.integers(lo, hi) if kind == "int"
+                   else st.floats(lo, hi))
+            for name, (kind, lo, hi) in ranges.items()
+        }
+
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**strats)(fn)
+            )
+
+        return deco
+
+    rng = np.random.default_rng(0xC0FFEE)
+    names = sorted(ranges)
+    cases = []
+    for _ in range(max_examples):
+        row = []
+        for name in names:
+            kind, lo, hi = ranges[name]
+            row.append(int(rng.integers(lo, hi + 1)) if kind == "int"
+                       else float(rng.uniform(lo, hi)))
+        cases.append(tuple(row))
+
+    def deco(fn):
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+    return deco
 
 
 def make_cfg(**kw):
@@ -43,13 +93,13 @@ def check_invariants(data, cfg, res: pt.PartitionResult):
         assert len(shard.ids) <= res.state.capacity
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(60, 300),
-    d=st.integers(4, 24),
-    seed=st.integers(0, 10_000),
-    eps=st.floats(1.05, 2.0),
-    omega=st.integers(1, 3),
+@fuzz(
+    max_examples=20,
+    n=("int", 60, 300),
+    d=("int", 4, 24),
+    seed=("int", 0, 10_000),
+    eps=("float", 1.05, 2.0),
+    omega=("int", 1, 3),
 )
 def test_partition_invariants_vectorized(n, d, seed, eps, omega):
     rng = np.random.default_rng(seed)
@@ -59,8 +109,7 @@ def test_partition_invariants_vectorized(n, d, seed, eps, omega):
     check_invariants(data, cfg, res)
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(60, 150), seed=st.integers(0, 1000))
+@fuzz(max_examples=10, n=("int", 60, 150), seed=("int", 0, 1000))
 def test_partition_invariants_sequential(n, seed):
     """Literal Algorithm 1 satisfies the same invariants."""
     rng = np.random.default_rng(seed)

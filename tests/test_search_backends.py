@@ -1,0 +1,202 @@
+"""Cross-backend parity for the unified ``repro.search`` engine.
+
+The ``numpy`` backend is the reference (exact DiskANN GreedySearch
+semantics); ``jax`` and ``pallas`` must land within 2 recall@10 points of
+it on both query topologies, and the stats double-count fix for the split
+path is pinned on a tiny fixture.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import IndexConfig
+from repro.core import builder
+from repro.data.synthetic import make_clustered, recall_at
+from repro.search import (MergedTopology, SearchStats, ShardTopology,
+                          as_topology, available_backends, beam_search,
+                          get_backend, register_backend, search)
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(2000, 32, n_queries=30, spread=1.0, seed=7)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return IndexConfig(n_clusters=4, degree=16, build_degree=32,
+                       block_size=512)
+
+
+@pytest.fixture(scope="module")
+def merged(ds, cfg):
+    return builder.build_scalegann(ds.data, cfg, n_workers=2)
+
+
+@pytest.fixture(scope="module")
+def split(ds, cfg):
+    return builder.build_extended_cagra(ds.data, cfg, n_workers=2)
+
+
+@pytest.fixture(scope="module")
+def merged_recalls(ds, merged):
+    topo = MergedTopology(data=ds.data, index=merged.index)
+    out = {}
+    for b in BACKENDS:
+        ids, st = search(topo, ds.queries, 10, backend=b, width=64)
+        out[b] = (recall_at(ids, ds.gt, 10), st)
+    return out
+
+
+@pytest.fixture(scope="module")
+def split_recalls(ds, split):
+    topo = ShardTopology(data=ds.data,
+                         shard_ids=[s.ids for s in split.shards],
+                         shard_graphs=split.shard_graphs)
+    out = {}
+    for b in BACKENDS:
+        ids, st = search(topo, ds.queries, 10, backend=b, width=32)
+        out[b] = (recall_at(ids, ds.gt, 10), st)
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_merged_recall_parity(merged_recalls, backend):
+    """jax/pallas within 2 recall@10 points of the numpy reference."""
+    ref, _ = merged_recalls["numpy"]
+    got, _ = merged_recalls[backend]
+    assert got >= ref - 0.02, f"{backend}: {got:.3f} vs numpy {ref:.3f}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS[1:])
+def test_split_recall_parity(split_recalls, backend):
+    ref, _ = split_recalls["numpy"]
+    got, _ = split_recalls[backend]
+    assert got >= ref - 0.02, f"{backend}: {got:.3f} vs numpy {ref:.3f}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_report_stats(merged_recalls, backend):
+    _, st = merged_recalls[backend]
+    assert st.n_distance_computations > 0
+    assert st.n_hops > 0
+
+
+def test_reference_recall_is_sane(merged_recalls, split_recalls):
+    assert merged_recalls["numpy"][0] > 0.85
+    assert split_recalls["numpy"][0] > 0.85
+
+
+def test_multi_entry_seeding_beats_medoid_only(ds, merged):
+    """The old jax path seeded from the medoid alone; entry_points seeding
+    must not be worse (it restores navigability on merged kNN graphs)."""
+    topo = MergedTopology(data=ds.data, index=merged.index)
+    ids_m, _ = search(topo, ds.queries, 10, backend="jax", width=64,
+                      n_entries=1)
+    ids_e, _ = search(topo, ds.queries, 10, backend="jax", width=64,
+                      n_entries=16)
+    r_m = recall_at(ids_m, ds.gt, 10)
+    r_e = recall_at(ids_e, ds.gt, 10)
+    assert r_e >= r_m - 0.01
+
+
+def test_split_stats_not_double_counted():
+    """Regression (old ``core.search.split_search`` bug): the global
+    re-rank recomputes distances already counted by the per-shard beam
+    search; the stat must count them once.
+
+    Tiny fixture: every shard small enough that beam search visits all of
+    it, so the per-shard counts are exactly the shard sizes (+0 re-rank).
+    """
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(40, 8)).astype(np.float32)
+    # two shards, fully-connected ring graphs -> beam visits every vector
+    ids_a = np.arange(0, 20, dtype=np.int64)
+    ids_b = np.arange(20, 40, dtype=np.int64)
+    graphs = []
+    for n in (20, 20):
+        g = np.stack([(np.arange(n) + s) % n for s in range(1, 6)], axis=1)
+        graphs.append(g.astype(np.int32))
+    topo = ShardTopology(data=data, shard_ids=[ids_a, ids_b],
+                         shard_graphs=graphs)
+    ids, st = search(topo, data[:3] + 0.01, 5, backend="numpy", width=32)
+    # 3 queries x (20 + 20) vectors, each scored exactly once
+    assert st.n_distance_computations == 3 * 40, st
+    # and the results really are the global top-5
+    d = ((data[None, :, :] - (data[:3] + 0.01)[:, None, :]) ** 2).sum(-1)
+    expect = np.argsort(d, axis=1)[:, :5]
+    assert set(ids[0].tolist()) == set(expect[0].tolist())
+
+
+def test_ip_metric_parity(ds, merged):
+    """The retrieval-attention scoring path (metric="ip") works on every
+    backend and agrees with brute force on the clear winners."""
+    topo = MergedTopology(data=ds.data, index=merged.index, metric="ip")
+    sc = ds.data.astype(np.float32) @ ds.queries[0].astype(np.float32)
+    brute = set(np.argsort(-sc)[:10].tolist())
+    for b in BACKENDS:
+        ids, _ = search(topo, ds.queries[:1], 10, backend=b, width=96)
+        overlap = len(set(ids[0].tolist()) & brute)
+        assert overlap >= 7, f"{b}: ip overlap {overlap}/10"
+
+
+def test_topology_adapters(ds, merged, split):
+    """Bare GlobalIndex and (ids, graphs) pairs are accepted; topologies
+    pass through; junk is rejected."""
+    ids_a, _ = search(merged.index, ds.queries[:4], 10, data=ds.data)
+    ids_b, _ = search(MergedTopology(data=ds.data, index=merged.index),
+                      ds.queries[:4], 10)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    pair = ([s.ids for s in split.shards], split.shard_graphs)
+    assert isinstance(as_topology(pair, ds.data), ShardTopology)
+    with pytest.raises(ValueError):
+        search(merged.index, ds.queries[:1], 10)  # data missing
+    with pytest.raises(TypeError):
+        as_topology(object())
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_width_must_cover_k(ds, merged, backend):
+    """Uniform contract: the candidate list bounds the result count, so
+    width < k is a clear error on every backend (the old paths diverged:
+    numpy over-returned, jax raised an opaque XLA shape error, pallas
+    silently truncated)."""
+    with pytest.raises(ValueError, match="width"):
+        search(merged.index, ds.queries[:1], 100, data=ds.data,
+               backend=backend, width=64)
+
+
+def test_backend_registry():
+    assert set(available_backends()) >= {"numpy", "jax", "pallas"}
+    with pytest.raises(ValueError):
+        get_backend("cuda")
+    with pytest.raises(TypeError):
+        register_backend("bad", object())
+
+    class Fake:
+        def search_merged(self, topo, queries, k, *, width, n_entries):
+            return np.zeros((len(queries), k), np.int64), SearchStats(1, 1)
+
+        def search_split(self, topo, queries, k, *, width, n_entries):
+            return np.zeros((len(queries), k), np.int64), SearchStats(1, 1)
+
+    register_backend("fake", Fake())
+    try:
+        assert get_backend("fake") is not None
+    finally:
+        import repro.search.api as api
+
+        del api._REGISTRY["fake"]
+
+
+def test_beam_search_single_query(ds, merged):
+    """The exported per-query primitive (latency path) still works."""
+    ids, st = beam_search(ds.data, merged.index.graph,
+                          merged.index.entry_points(8), ds.queries[0], 10,
+                          width=64)
+    assert len(ids) == 10
+    assert st.n_distance_computations > 0
+    overlap = len(set(ids.tolist()) & set(ds.gt[0].tolist()))
+    assert overlap >= 7

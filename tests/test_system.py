@@ -16,8 +16,8 @@ from repro.configs.base import IndexConfig
 from repro.core import builder, cost_model
 from repro.core.scheduler import (RuntimeModel, Scheduler, V100_ONDEMAND,
                                   Instance, InstanceType, make_tasks)
-from repro.core.search import search_index
 from repro.data.synthetic import make_clustered, recall_at
+from repro.search import search
 
 
 @pytest.fixture(scope="module")
@@ -38,13 +38,14 @@ def test_selectivity_sweep_table4(ds, cfg):
     for eps in (1.1, 1.5):
         c = dataclasses.replace(cfg, epsilon=eps)
         res = builder.build_scalegann(ds.data, c, n_workers=2)
-        ids, _ = search_index(ds.data, res.index, ds.queries, 10, width=96)
+        ids, _ = search(res.index, ds.queries, 10, data=ds.data, width=96)
         rows[eps] = (res.stats["replica_proportion"],
                      res.n_distance_computations,
                      recall_at(ids, ds.gt, 10))
     uniform = builder.build_scalegann(ds.data, cfg, n_workers=2,
                                       selective=False)
-    ids_u, _ = search_index(ds.data, uniform.index, ds.queries, 10, width=96)
+    ids_u, _ = search(uniform.index, ds.queries, 10, data=ds.data,
+                      width=96)
     r_u = recall_at(ids_u, ds.gt, 10)
 
     assert rows[1.1][0] < rows[1.5][0] < uniform.stats["replica_proportion"]
@@ -69,7 +70,7 @@ def test_end_to_end_spot_pipeline_with_preemption(ds, cfg):
                     checkpoint_resume=True, checkpoint_interval_s=0.1).run()
     assert sim.n_preemptions >= 1
     # every shard completed despite preemptions
-    ids, _ = search_index(ds.data, res.index, ds.queries, 10, width=96)
+    ids, _ = search(res.index, ds.queries, 10, data=ds.data, width=96)
     assert recall_at(ids, ds.gt, 10) > 0.8
     # cost model consumes the sim outputs
     xfer = cost_model.transfer_time_s(len(sizes), 16e9)
@@ -111,8 +112,8 @@ def test_vamana_drop_in_generality(ds):
     assert sel.stats["replica_proportion"] < uni.stats["replica_proportion"]
     from repro.data.synthetic import exact_ground_truth
     gt = exact_ground_truth(ds.data[:1200], ds.queries, 10)
-    ids_s, _ = search_index(ds.data[:1200], sel.index, ds.queries, 10,
-                            width=96)
-    ids_u, _ = search_index(ds.data[:1200], uni.index, ds.queries, 10,
-                            width=96)
+    ids_s, _ = search(sel.index, ds.queries, 10, data=ds.data[:1200],
+                      width=96)
+    ids_u, _ = search(uni.index, ds.queries, 10, data=ds.data[:1200],
+                      width=96)
     assert recall_at(ids_s, gt, 10) >= recall_at(ids_u, gt, 10) - 0.07
