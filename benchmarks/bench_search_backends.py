@@ -1,16 +1,19 @@
 """Search-backend benchmark: QPS + distance computations per query.
 
 Runs every registered backend over the 2k-vector synthetic fixture on both
-query topologies (merged ScaleGANN index, split-only shards) and writes
-``BENCH_search.json`` next to the repo root so future PRs have a perf
-trajectory for the serving path.  Jitted backends are warmed on the exact
-query shape first, so QPS measures steady-state serving, not tracing.
+query topologies (merged ScaleGANN index, split-only shards) plus the
+centroid-routed split path (``nprobe`` ∈ {1, 2, all} over the ScaleGANN
+partition's replicated shards), and writes ``BENCH_search.json`` next to
+the repo root so future PRs have a perf trajectory for the serving path.
+Jitted backends are warmed on the exact query shape first, so QPS measures
+steady-state serving, not tracing.
 
     PYTHONPATH=src python benchmarks/bench_search_backends.py
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import time
@@ -25,32 +28,59 @@ N_QUERIES = 256
 WIDTH = 64
 K = 10
 REPEATS = 3
+# Routing needs enough shards to prune: 2k vectors over 8 replicated
+# ScaleGANN shards (the merged/split sections keep their historical
+# 4-cluster fixture for trajectory comparability).
+N_SHARDS_ROUTED = 8
 
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_search.json"
+
+
+def _bench_one(topo, ds, backend: str, *, nprobe: int | None = None) -> dict:
+    kw = {"backend": backend, "width": WIDTH}
+    if nprobe is not None:
+        kw["nprobe"] = nprobe
+    search(topo, ds.queries, K, **kw)  # warm (jit trace + routing shapes)
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        ids, st = search(topo, ds.queries, K, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "qps": len(ds.queries) / best,
+        "latency_s_per_batch": best,
+        "recall_at_10": recall_at(ids, ds.gt, K),
+        "mean_distance_computations_per_query":
+            st.n_distance_computations / len(ds.queries),
+        "mean_hops_per_query": st.n_hops / len(ds.queries),
+    }
 
 
 def bench_topology(topo_name: str, topo, ds) -> dict:
     out = {}
     for backend in available_backends():
-        search(topo, ds.queries, K, backend=backend, width=WIDTH)  # warm
-        best = float("inf")
-        for _ in range(REPEATS):
-            t0 = time.perf_counter()
-            ids, st = search(topo, ds.queries, K, backend=backend,
-                             width=WIDTH)
-            best = min(best, time.perf_counter() - t0)
-        out[backend] = {
-            "qps": len(ds.queries) / best,
-            "latency_s_per_batch": best,
-            "recall_at_10": recall_at(ids, ds.gt, K),
-            "mean_distance_computations_per_query":
-                st.n_distance_computations / len(ds.queries),
-            "mean_hops_per_query": st.n_hops / len(ds.queries),
-        }
-        row = out[backend]
-        print(f"{topo_name:7s} {backend:7s} qps={row['qps']:8.0f} "
+        out[backend] = row = _bench_one(topo, ds, backend)
+        print(f"{topo_name:16s} {backend:7s} qps={row['qps']:8.0f} "
               f"recall@10={row['recall_at_10']:.3f} "
               f"ndist/q={row['mean_distance_computations_per_query']:.0f}")
+    return out
+
+
+def bench_routed(topo, ds, n_shards: int) -> dict:
+    """Routed split path: nprobe ∈ {1, 2, all} per backend, so the routing
+    win (ndist/q, QPS) and its recall cost land in BENCH_search.json."""
+    out = {}
+    for nprobe in (1, 2, n_shards):
+        label = "nprobe=all" if nprobe == n_shards else f"nprobe={nprobe}"
+        out[label] = {}
+        for backend in available_backends():
+            out[label][backend] = row = _bench_one(
+                topo, ds, backend, nprobe=nprobe
+            )
+            print(f"routed {label:11s} {backend:7s} qps={row['qps']:8.0f} "
+                  f"recall@10={row['recall_at_10']:.3f} "
+                  f"ndist/q="
+                  f"{row['mean_distance_computations_per_query']:.0f}")
     return out
 
 
@@ -61,17 +91,42 @@ def main() -> dict:
                       block_size=512)
     merged = builder.build_scalegann(ds.data, cfg, n_workers=2)
     split = builder.build_extended_cagra(ds.data, cfg, n_workers=2)
+    routed = builder.build_scalegann(
+        ds.data, dataclasses.replace(cfg, n_clusters=N_SHARDS_ROUTED),
+        n_workers=2,
+    )
 
     results = {
         "fixture": {"n_vectors": N_VECTORS, "n_queries": N_QUERIES,
                     "dim": 32, "width": WIDTH, "k": K},
         "merged": bench_topology("merged", merged.topology(ds.data), ds),
         "split": bench_topology("split", split.topology(ds.data), ds),
+        "split_routed_fixture": {
+            "n_shards": N_SHARDS_ROUTED,
+            "builder": "scalegann (selective replication, pre-merge shards)",
+            "replica_proportion": routed.stats["replica_proportion"],
+        },
+        "split_routed": bench_routed(
+            routed.shard_topology(ds.data), ds, N_SHARDS_ROUTED
+        ),
     }
     speedup = (results["merged"]["jax"]["qps"]
                / results["merged"]["numpy"]["qps"])
     results["jax_over_numpy_qps"] = speedup
     print(f"jax/numpy merged QPS: {speedup:.2f}x")
+
+    # the routing claim (ISSUE 2 acceptance): nprobe=2 cuts ndist/q >= 2x
+    # versus full scatter on the same shards, at recall@10 >= 0.95
+    full = results["split_routed"]["nprobe=all"]["jax"]
+    np2 = results["split_routed"]["nprobe=2"]["jax"]
+    cut = (full["mean_distance_computations_per_query"]
+           / np2["mean_distance_computations_per_query"])
+    results["routed_nprobe2_distance_cut"] = cut
+    results["claim.routed_nprobe2_cut_ge_2x_at_recall_095"] = bool(
+        cut >= 2.0 and np2["recall_at_10"] >= 0.95
+    )
+    print(f"routed nprobe=2 distance cut: {cut:.2f}x "
+          f"(recall@10 {np2['recall_at_10']:.3f})")
 
     OUT_PATH.write_text(json.dumps(results, indent=2, sort_keys=True))
     print(f"wrote {OUT_PATH}")

@@ -39,6 +39,19 @@ def main():
               f"({stats.n_distance_computations / len(ds.queries):.0f} "
               f"distance computations / query)")
 
+    # 5. Routed split serving: the partition's replicated shards can be
+    #    served directly (no merge), routing each query to its nprobe
+    #    nearest shard centroids instead of broadcasting to all of them.
+    shard_topo = res.shard_topology(ds.data)
+    for nprobe in (None, 2):
+        ids, stats = search(shard_topo, ds.queries, k=10, backend="jax",
+                            width=96, nprobe=nprobe)
+        label = "scatter-all" if nprobe is None else f"nprobe={nprobe}"
+        print(f"[shards/{label}] recall@10 = "
+              f"{recall_at(ids, ds.gt, 10):.3f}  "
+              f"({stats.n_distance_computations / len(ds.queries):.0f} "
+              f"distance computations / query)")
+
 
 if __name__ == "__main__":
     main()

@@ -44,6 +44,7 @@ class BuildResult:
     per_shard_s: list[float]
     n_distance_computations: int
     stats: dict
+    centroids: np.ndarray | None = None  # [n_shards, D] partition centroids
 
     @property
     def overall_s(self) -> float:
@@ -51,16 +52,31 @@ class BuildResult:
 
     def topology(self, data: np.ndarray, *, metric: str = "l2"):
         """The search topology this build serves: merged systems expose the
-        global graph, split-only systems the shard scatter path."""
+        global graph, split-only systems the centroid-routed shard path
+        (``repro.search.search(..., nprobe=...)`` prunes which shards each
+        query visits)."""
         from repro.search import MergedTopology, ShardTopology
 
         if self.index is not None:
             return MergedTopology(data=data, index=self.index, metric=metric)
+        return self.shard_topology(data, metric=metric)
+
+    def shard_topology(self, data: np.ndarray, *, metric: str = "l2"):
+        """The pre-merge routed serving view: the partition's (replicated)
+        shards + centroids as a :class:`~repro.search.ShardTopology`.
+
+        For merged systems this serves the same vectors through per-shard
+        query routing (``repro.search.search(..., nprobe=...)``) instead of
+        the global graph — ScaleGANN's bounded replication is what keeps
+        routed recall high (boundary vectors live in several shards)."""
+        from repro.search import ShardTopology
+
         return ShardTopology(
             data=data,
             shard_ids=[s.ids for s in self.shards],
             shard_graphs=self.shard_graphs,
             metric=metric,
+            centroids=self.centroids,
         )
 
     def search(
@@ -72,15 +88,17 @@ class BuildResult:
         backend: str = "numpy",
         width: int = 64,
         n_entries: int = 16,
+        nprobe: int | None = None,
         metric: str = "l2",
     ):
         """Serve queries on this build via :func:`repro.search.search` —
-        the same call works for merged and split-only systems."""
+        the same call works for merged and split-only systems (``nprobe``
+        routes split-topology queries; ignored on merged builds)."""
         from repro.search import search
 
         return search(
             self.topology(data, metric=metric), queries, k,
-            backend=backend, width=width, n_entries=n_entries,
+            backend=backend, width=width, n_entries=n_entries, nprobe=nprobe,
         )
 
 
@@ -149,6 +167,7 @@ def build_scalegann(
         per_shard_s=per_shard_s,
         n_distance_computations=sum(i.n_distance_computations for i in idxs),
         stats=dict(part.stats),
+        centroids=part.centroids,
     )
 
 
@@ -165,9 +184,11 @@ def build_diskann(
 
 def _split_partition(
     data: np.ndarray, cfg: IndexConfig, *, kmeans: bool
-) -> tuple[list[Shard], float]:
+) -> tuple[list[Shard], np.ndarray, float]:
     """Replication-free split: k-means shards (Extended CAGRA) or contiguous
-    blocks (GGNN's naive split)."""
+    blocks (GGNN's naive split).  Either way the shards get routing
+    centroids — kmeans centroids, or per-shard means for the naive split —
+    so serving can prune which shards a query visits."""
     t0 = time.perf_counter()
     n = len(data)
     if kmeans:
@@ -177,6 +198,7 @@ def _split_partition(
             selective=True,
         )
         shards = part.shards
+        centroids = part.centroids
     else:
         per = -(-n // cfg.n_clusters)
         shards = [
@@ -186,7 +208,10 @@ def _split_partition(
             )
             for s in range(0, n, per)
         ]
-    return shards, time.perf_counter() - t0
+        centroids = np.stack([
+            np.asarray(data[s.ids], np.float32).mean(axis=0) for s in shards
+        ])
+    return shards, centroids, time.perf_counter() - t0
 
 
 def build_split_only(
@@ -198,8 +223,11 @@ def build_split_only(
     n_workers: int = 1,
 ) -> BuildResult:
     """Extended CAGRA (kmeans_split=True) / GGNN (False): no replication, no
-    merge; queries must search every shard (repro.search ShardTopology)."""
-    shards, partition_s = _split_partition(data, cfg, kmeans=kmeans_split)
+    merge; queries search the shards directly (repro.search ShardTopology),
+    routed by the carried centroids when ``nprobe`` is set."""
+    shards, centroids, partition_s = _split_partition(
+        data, cfg, kmeans=kmeans_split
+    )
     idxs, per_shard_s, wall = _build_shards(
         data, shards, cfg, algo="cagra", n_workers=n_workers
     )
@@ -215,6 +243,7 @@ def build_split_only(
         per_shard_s=per_shard_s,
         n_distance_computations=sum(i.n_distance_computations for i in idxs),
         stats={"n": len(data), "replica_proportion": 0.0},
+        centroids=centroids,
     )
 
 

@@ -305,6 +305,13 @@ class PartitionResult:
     def replica_proportion(self) -> float:
         return self.stats["replica_proportion"]
 
+    @property
+    def centroids(self) -> np.ndarray:
+        """[n_clusters, D] kmeans centroids the shards were assigned by.
+        Carried through the builder into serving so split-topology queries
+        can be routed to their nearest shards instead of broadcast."""
+        return self.state.centroids
+
 
 def iter_blocks(
     data: np.ndarray | Iterable[np.ndarray], block_size: int

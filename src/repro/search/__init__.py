@@ -1,8 +1,9 @@
 """``repro.search`` — the unified, backend-pluggable query engine.
 
 One public API, :func:`search`, serves every query topology in the repo
-(merged ScaleGANN/DiskANN index, split-only shard scatter/re-rank, and the
-retrieval-attention inner-product path) on any registered backend:
+(merged ScaleGANN/DiskANN index, split-only shards — centroid-routed via
+``nprobe`` or full scatter — and the retrieval-attention inner-product
+path) on any registered backend:
 
   * ``numpy``  — reference; exact DiskANN GreedySearch semantics + stats;
   * ``jax``    — vmapped batched beam search, multi-entry seeding,

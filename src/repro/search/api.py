@@ -35,7 +35,7 @@ class SearchBackend(Protocol):
 
     def search_split(
         self, topo: ShardTopology, queries: np.ndarray, k: int, *,
-        width: int, n_entries: int,
+        width: int, n_entries: int, nprobe: int | None,
     ) -> tuple[np.ndarray, SearchStats]: ...
 
 
@@ -83,6 +83,7 @@ def search(
     backend: str = "numpy",
     width: int = 64,
     n_entries: int = 16,
+    nprobe: int | None = None,
     data: np.ndarray | None = None,
     metric: str | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
@@ -96,6 +97,15 @@ def search(
     semantics), ``"jax"`` (vmapped batched beam, throughput-shaped) or
     ``"pallas"`` (kernel-staged distances/top-k, interpret-mode off-TPU).
 
+    ``nprobe`` — split topologies only: route each query to its ``nprobe``
+    nearest shards by partition centroid (one batched query×centroid
+    distance tile, counted in the stats) instead of searching every shard.
+    The default ``None`` — or a topology without centroids — preserves the
+    full scatter-to-all-shards behavior; ``nprobe >= n_shards`` routes
+    through the same machinery but covers every shard, returning the
+    scatter ids exactly (plus the counted routing tile).  Ignored on merged
+    topologies (a merged graph has no shards to prune).
+
     Returns ``(ids [Q, k] int64, SearchStats)``.
     """
     if width < k:
@@ -103,6 +113,8 @@ def search(
             f"width ({width}) must be >= k ({k}): the candidate list bounds "
             "how many results a beam search can return"
         )
+    if nprobe is not None and nprobe < 1:
+        raise ValueError(f"nprobe must be >= 1, got {nprobe}")
     topo = as_topology(index_or_shards, data, metric=metric or "l2")
     if metric is not None and topo.metric != metric:
         # never mutate a caller-owned topology object
@@ -114,5 +126,5 @@ def search(
             topo, queries, k, width=width, n_entries=n_entries
         )
     return impl.search_split(
-        topo, queries, k, width=width, n_entries=n_entries
+        topo, queries, k, width=width, n_entries=n_entries, nprobe=nprobe
     )

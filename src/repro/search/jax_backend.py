@@ -194,8 +194,14 @@ def batch_beam_search(
     n_iters: int | None = None,
     expand: int = 8,
     metric: str = "l2",
+    n_real: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
-    """Host-facing wrapper: numpy in/out, stats summed over the batch."""
+    """Host-facing wrapper: numpy in/out, stats summed over the batch.
+
+    ``n_real`` — count stats over the first ``n_real`` queries only (the
+    routed split driver pads query groups to stable jit shapes by cycling
+    real rows; padded lanes must not inflate the stats).
+    """
     n_iters = default_n_iters(width) if n_iters is None else n_iters
     e = _prep_entries(entries, width)
     ids, ds, n_dist, hops = _batch_beam(
@@ -206,8 +212,8 @@ def batch_beam_search(
         k, width, n_iters, expand, metric,
     )
     stats = SearchStats(
-        n_distance_computations=int(np.asarray(n_dist).sum()),
-        n_hops=int(np.asarray(hops).sum()),
+        n_distance_computations=int(np.asarray(n_dist)[:n_real].sum()),
+        n_hops=int(np.asarray(hops)[:n_real].sum()),
     )
     return np.asarray(ids, np.int64), np.asarray(ds), stats
 
@@ -231,8 +237,9 @@ def search_split(
     k: int,
     *,
     width: int = 64,
-    n_entries: int = 16,  # unused: shard searches seed from local row 0
+    n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
+    nprobe: int | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(batch_beam_search, topo, queries, k, width=width,
-                     n_iters=n_iters)
+                     n_iters=n_iters, nprobe=nprobe, bucket=True)

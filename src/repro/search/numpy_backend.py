@@ -17,7 +17,8 @@ import heapq
 
 import numpy as np
 
-from repro.search.types import MergedTopology, SearchStats, ShardTopology
+from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+                                run_split)
 
 
 def _score_rows(
@@ -111,43 +112,58 @@ def search_merged(
     return out, stats
 
 
+def _serial_batch_beam(
+    data: np.ndarray,
+    graph: np.ndarray,
+    entry,
+    queries: np.ndarray,
+    k: int,
+    *,
+    width: int = 64,
+    n_iters: int | None = None,  # unused: the reference runs to convergence
+    metric: str = "l2",
+    n_real: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Batched adapter over the per-query reference :func:`beam_search`, so
+    the numpy backend shares :func:`~repro.search.types.run_split` (routing,
+    pool padding, re-rank) with the batched backends.  Shape-bucketing pad
+    rows (``n_real``) are skipped outright — a serial loop gains nothing
+    from stable batch shapes."""
+    qs = np.asarray(queries, np.float32)[:n_real]
+    out = np.full((len(qs), k), -1, np.int64)
+    dists = np.full((len(qs), k), np.inf, np.float32)
+    stats = SearchStats()
+    for i, q in enumerate(qs):
+        ids, s = beam_search(data, graph, entry, q, k, width=width,
+                             metric=metric)
+        stats += s
+        out[i, : len(ids)] = ids
+        if len(ids):
+            # exact scores for the re-rank; these rows were scored (and
+            # counted) in-shard already, so this is bookkeeping, not new
+            # distance work
+            dists[i, : len(ids)] = _score_rows(data, ids, q, metric)
+    return out, dists, stats
+
+
 def search_split(
     topo: ShardTopology,
     queries: np.ndarray,
     k: int,
     *,
     width: int = 64,
-    n_entries: int = 16,  # unused: each shard search seeds from row 0
+    n_entries: int = 16,  # unused: shards seed from their centroid entry
+    nprobe: int | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
-    """Split-only query path (GGNN / Extended CAGRA, §VI): search every shard
-    independently, then merge + re-rank the per-shard top-k.
+    """Split-only query path (GGNN / Extended CAGRA, §VI): route each query
+    to its ``nprobe`` nearest shards (all shards when ``nprobe=None`` or the
+    topology has no centroids), search them independently, then merge +
+    re-rank the per-shard top-k.
 
     The re-rank reuses distances already computed (and counted) inside the
     per-shard beam search, so it adds *no* distance computations — the old
     ``core.search.split_search`` double-counted them, inflating the paper's
     Fig. 4/5 proxy for the split baselines.
     """
-    qs = np.asarray(queries, np.float32)
-    out = np.full((len(qs), k), -1, np.int64)
-    stats = SearchStats()
-    # gather each shard's vectors once, not once per query
-    shard_data = [np.asarray(topo.data[ids]) for ids in topo.shard_ids]
-    for i, q in enumerate(qs):
-        pool: list[tuple[float, int]] = []
-        for ids, graph, vecs in zip(topo.shard_ids, topo.shard_graphs,
-                                    shard_data):
-            if len(ids) == 0:
-                continue
-            local, s = beam_search(
-                vecs, graph, 0, q, min(k, len(ids)),
-                width=width, metric=topo.metric,
-            )
-            stats += s
-            # re-rank on exact scores; the rows were scored in-shard already,
-            # so this recomputation is bookkeeping, not new distance work
-            gd = _score_rows(topo.data, ids[local], q, topo.metric)
-            pool.extend(zip(gd.tolist(), ids[local].tolist()))
-        top = heapq.nsmallest(k, set(pool))
-        ids_out = np.asarray([v for _, v in top], np.int64)
-        out[i, : len(ids_out)] = ids_out
-    return out, stats
+    return run_split(_serial_batch_beam, topo, queries, k, width=width,
+                     nprobe=nprobe)

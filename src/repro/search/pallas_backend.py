@@ -182,7 +182,11 @@ def kernel_beam_search(
     width: int = 64,
     n_iters: int | None = None,
     metric: str = "l2",
+    n_real: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    """``n_real`` — count stats over the first ``n_real`` queries only (the
+    routed split driver pads query groups to stable jit shapes by cycling
+    real rows; padded lanes must not inflate the stats)."""
     n_iters = default_n_iters(width) if n_iters is None else n_iters
     e = np.atleast_1d(np.asarray(entries, np.int64))[:width].astype(np.int32)
     x = jnp.asarray(np.asarray(data, np.float32))
@@ -194,8 +198,8 @@ def kernel_beam_search(
         k, width, n_iters, metric,
     )
     stats = SearchStats(
-        n_distance_computations=int(np.asarray(n_dist).sum()),
-        n_hops=int(np.asarray(hops).sum()),
+        n_distance_computations=int(np.asarray(n_dist)[:n_real].sum()),
+        n_hops=int(np.asarray(hops)[:n_real].sum()),
     )
     return np.asarray(ids, np.int64), np.asarray(ds), stats
 
@@ -219,8 +223,9 @@ def search_split(
     k: int,
     *,
     width: int = 64,
-    n_entries: int = 16,  # unused: shard searches seed from local row 0
+    n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
+    nprobe: int | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(kernel_beam_search, topo, queries, k, width=width,
-                     n_iters=n_iters)
+                     n_iters=n_iters, nprobe=nprobe, bucket=True)

@@ -6,8 +6,11 @@ systems answer queries with the same beam search):
 
   * :class:`MergedTopology`   — one global graph (ScaleGANN / DiskANN after
                                  the edge-union merge).
-  * :class:`ShardTopology`    — split-only shard scatter + global re-rank
-                                 (GGNN / Extended CAGRA, no merge step).
+  * :class:`ShardTopology`    — split-only shards + global re-rank (GGNN /
+                                 Extended CAGRA, or ScaleGANN's pre-merge
+                                 replicated shards); queries are routed to
+                                 their ``nprobe`` nearest shard centroids,
+                                 or scattered to every shard by default.
 
 Both carry their vectors and metric so a backend gets everything it needs
 from a single object, and ``as_topology`` adapts the loose
@@ -50,12 +53,50 @@ class MergedTopology:
 
 @dataclasses.dataclass
 class ShardTopology:
-    """Split-only shards: every query searches every shard, then re-ranks."""
+    """Split-only shards + optional partition centroids.
+
+    Without ``centroids`` every query searches every shard (scatter).  With
+    them — the partitioner already computed them, ``BuildResult.topology``
+    carries them through — queries can be *routed* to their ``nprobe``
+    nearest shards (``repro.search.search(..., nprobe=...)``), and each
+    shard search seeds from the local vector nearest its centroid instead of
+    local row 0.
+    """
 
     data: np.ndarray  # [N, D] global vectors
     shard_ids: list  # list of [n_i] int64 global ids
     shard_graphs: list  # list of [n_i, R] int32 local graphs
     metric: str = "l2"
+    centroids: np.ndarray | None = None  # [n_shards, D] partition centroids
+    # cached per-shard entry points (derived, rebuilt on dataclasses.replace)
+    _entries: np.ndarray | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+
+    def shard_entries(self) -> np.ndarray:
+        """Local entry index per shard: the vector nearest the shard's
+        centroid, or local row 0 when no centroids are known.
+
+        This is an index-time precomputation (cached, query-independent), so
+        it does not count toward per-query ``SearchStats`` — the per-query
+        seed scoring inside the beam search still does.
+        """
+        if self._entries is None:
+            ent = np.zeros(len(self.shard_ids), np.int64)
+            if self.centroids is not None:
+                for s, ids in enumerate(self.shard_ids):
+                    if len(ids) == 0:
+                        continue
+                    rows = np.asarray(self.data[ids], np.float32)
+                    c = np.asarray(self.centroids[s], np.float32)
+                    if self.metric == "ip":
+                        scores = -(rows @ c)
+                    else:
+                        diff = rows - c[None, :]
+                        scores = np.einsum("nd,nd->n", diff, diff)
+                    ent[s] = int(np.argmin(scores))
+            self._entries = ent
+        return self._entries
 
 
 Topology = MergedTopology | ShardTopology
@@ -114,53 +155,165 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
     return ids, stats
 
 
-def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
-              width: int, n_iters: int | None = None):
-    """Shared split-topology driver: shard scatter + global re-rank.
+def _query_centroid_distances(
+    queries: np.ndarray, centroids: np.ndarray, metric: str
+) -> np.ndarray:
+    """One batched [Q, S] query×centroid tile through the repo's distance
+    kernels (``kernels.distance`` on TPU, the jnp reference elsewhere)."""
+    import jax.numpy as jnp  # deferred: keep numpy-only imports jax-free
 
-    Per-shard beam scores are exact, so the re-rank reuses them — no extra
-    distance computations (the old split path double-counted these).  Shard
-    searches seed from local row 0 (reference parity).
+    from repro.kernels import ops
+
+    d = ops.pairwise_distance(
+        jnp.asarray(np.asarray(queries, np.float32)),
+        jnp.asarray(np.asarray(centroids, np.float32)),
+        metric,
+    )
+    return np.asarray(d)
+
+
+def pad_pool(
+    ids: np.ndarray, d: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a per-shard [Q, k_shard] result pool to exactly ``k`` columns
+    (-1 ids / inf distances).  Tiny shards (fewer than k vectors)
+    legitimately return fewer columns; uniform width keeps the routed
+    scatter-back and the pool concatenation regular."""
+    q, kk = ids.shape
+    if kk == k:
+        return ids, d
+    if kk > k:
+        return ids[:, :k], d[:, :k]
+    pad_i = np.full((q, k - kk), -1, np.int64)
+    pad_d = np.full((q, k - kk), np.inf, np.float32)
+    return (np.concatenate([ids, pad_i], axis=1),
+            np.concatenate([d, pad_d], axis=1))
+
+
+def _bucket_size(m: int) -> int:
+    """Smallest bucketed batch size >= m: multiples of an eighth of the
+    enclosing power of two (…, 8, 9, …, 16, 18, 20, …, 32, 36, …), so
+    padding wastes at most ~15% compute while the number of distinct jit
+    trace shapes stays O(log Q)."""
+    if m <= 8:
+        return 8
+    p = 1 << (m - 1).bit_length()  # next power of two >= m
+    step = p // 8
+    return ((m + step - 1) // step) * step
+
+
+def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
+              width: int, n_iters: int | None = None,
+              nprobe: int | None = None, bucket: bool = False):
+    """Shared split-topology driver: centroid-routed scatter + global re-rank.
+
+    With ``nprobe`` set and centroids available, one batched query×centroid
+    distance tile routes each query to its ``min(nprobe, n_shards)`` nearest
+    shards, and each shard runs a single batched beam search over only the
+    queries assigned to it.  ``nprobe=None`` (default) — or a topology
+    without centroids — scatters every query to every shard, the
+    pre-routing behavior; ``nprobe >= n_shards`` still routes (the tile is
+    computed and counted) but covers every shard, so it returns the scatter
+    ids exactly.  Either way each shard search seeds from the local vector
+    nearest its centroid (:meth:`ShardTopology.shard_entries`; local row 0
+    without centroids), and per-shard beam scores are exact so the re-rank
+    reuses them — no extra distance computations.  The routing tile itself
+    is genuine per-query distance work and is counted.
+
+    ``bucket=True`` (the jitted backends) pads each shard's routed query
+    group up to a bounded set of sizes (8 steps per power-of-two octave,
+    ≤~15% padding waste) — by cycling real rows, so the padded lanes
+    converge exactly like the lanes they copy — which caps jit retraces at
+    O(n_shards · log Q) distinct shapes instead of one per routing
+    distribution.  ``beam_fn`` must then honor ``n_real`` so padded lanes
+    never reach the stats.
     """
+    queries = np.asarray(queries, np.float32)
     nq = len(queries)
     stats = SearchStats()
-    pool_ids: list[np.ndarray] = []
-    pool_d: list[np.ndarray] = []
-    for ids, g in zip(topo.shard_ids, topo.shard_graphs):
-        if len(ids) == 0:
-            continue
-        local, ld, s = beam_fn(
-            np.asarray(topo.data[ids]), g, 0, queries, min(k, len(ids)),
-            width=width, n_iters=n_iters, metric=topo.metric,
+    if nprobe is not None and nprobe < 1:
+        raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+    live = [s for s, ids in enumerate(topo.shard_ids) if len(ids) > 0]
+    if not live or nq == 0:
+        return np.full((nq, k), -1, np.int64), stats
+    n_live = len(live)
+    route = nprobe is not None and topo.centroids is not None
+    if route:
+        cent = np.asarray(topo.centroids, np.float32)[live]
+        qc = _query_centroid_distances(queries, cent, topo.metric)
+        stats.n_distance_computations += nq * n_live
+        # [Q, nprobe] positions into `live`, nearest shard first
+        probes = np.argsort(qc, axis=1, kind="stable")[:, :min(nprobe,
+                                                               n_live)]
+    else:
+        probes = np.broadcast_to(
+            np.arange(n_live), (nq, n_live)
         )
-        stats += s
+    n_probe = probes.shape[1]
+    entries = topo.shard_entries()
+    pool_ids = np.full((nq, n_probe, k), -1, np.int64)
+    pool_d = np.full((nq, n_probe, k), np.inf, np.float32)
+    for p, s in enumerate(live):
+        qrows, slots = np.nonzero(probes == p)
+        m = qrows.size
+        if m == 0:
+            continue
+        use_rows = qrows
+        if bucket and m < nq:
+            b = min(_bucket_size(m), nq)
+            if b > m:
+                use_rows = np.resize(qrows, b)  # cycle real rows as padding
+        ids = topo.shard_ids[s]
+        local, ld, s_stats = beam_fn(
+            np.asarray(topo.data[ids]), topo.shard_graphs[s],
+            int(entries[s]), queries[use_rows], min(k, len(ids)),
+            width=width, n_iters=n_iters, metric=topo.metric,
+            n_real=m if use_rows is not qrows else None,
+        )
+        stats += s_stats
+        local, ld = pad_pool(local[:m], ld[:m], k)
         gids = np.where(local >= 0, ids[np.maximum(local, 0)], -1)
-        pool_ids.append(gids)
-        pool_d.append(np.where(local >= 0, ld, np.inf))
-    return rerank_shard_pools(pool_ids, pool_d, k, nq), stats
+        pool_ids[qrows, slots] = gids
+        pool_d[qrows, slots] = np.where(local >= 0, ld, np.inf)
+    return rerank_shard_pools(
+        pool_ids.reshape(nq, n_probe * k),
+        pool_d.reshape(nq, n_probe * k), k
+    ), stats
 
 
 def rerank_shard_pools(
-    pool_ids: list[np.ndarray],  # per shard [Q, k_shard] global ids (-1 pad)
-    pool_d: list[np.ndarray],  # per shard [Q, k_shard] exact scores (inf pad)
+    cat_ids: np.ndarray,  # [Q, P] global ids over all probed shards (-1 pad)
+    cat_d: np.ndarray,  # [Q, P] exact scores (inf pad)
     k: int,
-    nq: int,
 ) -> np.ndarray:
-    """Global re-rank for the split topology, shared by the batched
-    backends: dedup by id (replicated vectors appear in several shards,
-    keep the closest copy) and take the k best per query.  Scores were
-    already computed — and counted — by the in-shard searches, so this adds
-    no distance computations."""
+    """Global re-rank for the split topology: dedup by id (replicated
+    vectors appear in several shards, keep the closest copy) and take the k
+    best per query.  Scores were already computed — and counted — by the
+    in-shard searches, so this adds no distance computations.
+
+    Fully vectorized: a (d, id)-within-(id)-groups ``lexsort`` collapses
+    duplicates to their closest copy, and a second (id)-within-(d)
+    ``lexsort`` yields the k best per query with the same (distance, id)
+    tie-break as the old per-query dict loop.
+    """
+    nq = len(cat_ids)
     out = np.full((nq, k), -1, np.int64)
-    if not pool_ids:
-        return out
-    cat_ids = np.concatenate(pool_ids, axis=1)  # [Q, Σ k_shard]
-    cat_d = np.concatenate(pool_d, axis=1)
-    for i in range(nq):
-        seen: dict[int, float] = {}
-        for gid, d in zip(cat_ids[i].tolist(), cat_d[i].tolist()):
-            if gid >= 0 and (gid not in seen or d < seen[gid]):
-                seen[gid] = d
-        top = sorted(seen.items(), key=lambda kv: (kv[1], kv[0]))[:k]
-        out[i, : len(top)] = [gid for gid, _ in top]
+    cat_ids = np.asarray(cat_ids, np.int64)
+    cat_d = np.asarray(cat_d, np.float32)
+    pad = np.iinfo(np.int64).max  # sorts after every real id
+    invalid = cat_ids < 0
+    ids_key = np.where(invalid, pad, cat_ids)
+    d_key = np.where(invalid, np.inf, cat_d)
+    # group duplicate ids; within a group the closest copy comes first
+    order = np.lexsort((d_key, ids_key), axis=1)
+    sid = np.take_along_axis(ids_key, order, axis=1)
+    sd = np.take_along_axis(d_key, order, axis=1)
+    dup = np.zeros_like(sid, bool)
+    dup[:, 1:] = sid[:, 1:] == sid[:, :-1]
+    sid = np.where(dup, pad, sid)
+    sd = np.where(dup, np.inf, sd)
+    # k best per query by (distance, id); padding sorts last
+    top = np.lexsort((sid, sd), axis=1)[:, :k]
+    top_ids = np.take_along_axis(sid, top, axis=1)
+    out[:, : top.shape[1]] = np.where(top_ids == pad, -1, top_ids)
     return out

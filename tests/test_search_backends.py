@@ -3,8 +3,13 @@
 The ``numpy`` backend is the reference (exact DiskANN GreedySearch
 semantics); ``jax`` and ``pallas`` must land within 2 recall@10 points of
 it on both query topologies, and the stats double-count fix for the split
-path is pinned on a tiny fixture.
+path is pinned on a tiny fixture.  Centroid routing (``nprobe``) must be a
+pure pruning of the full scatter: ``nprobe=n_shards`` returns identical ids
+on every backend, and ``nprobe=2`` over the ScaleGANN replicated shards
+halves the distance budget while holding recall@10 >= 0.95.
 """
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -38,6 +43,26 @@ def merged(ds, cfg):
 @pytest.fixture(scope="module")
 def split(ds, cfg):
     return builder.build_extended_cagra(ds.data, cfg, n_workers=2)
+
+
+@pytest.fixture(scope="module")
+def routed_topo(ds, cfg):
+    """Routing fixture: the ScaleGANN partition's replicated shards over 8
+    clusters — enough shards that pruning matters, and bounded replication
+    keeps boundary neighbors reachable from a routed subset."""
+    b = builder.build_scalegann(
+        ds.data, dataclasses.replace(cfg, n_clusters=8), n_workers=2
+    )
+    return b.shard_topology(ds.data)
+
+
+@pytest.fixture(scope="module")
+def routed_queries(ds):
+    """256 held-out queries over the same 2k vectors (the module ``ds`` has
+    only 30 — too few to pin a recall floor tightly)."""
+    big = make_clustered(2000, 32, n_queries=256, spread=1.0, seed=7)
+    np.testing.assert_array_equal(big.data, ds.data)
+    return big
 
 
 @pytest.fixture(scope="module")
@@ -130,6 +155,98 @@ def test_split_stats_not_double_counted():
     assert set(ids[0].tolist()) == set(expect[0].tolist())
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_routed_full_probe_matches_scatter(ds, routed_topo, backend):
+    """nprobe=n_shards takes the *routed* branch (query×centroid tile,
+    per-shard grouping, slot scatter-back) but covers every shard — it must
+    return exactly the full-scatter ids on every backend, and cost exactly
+    one routing tile more."""
+    n_shards = len(routed_topo.shard_ids)
+    ids_full, st_full = search(routed_topo, ds.queries, 10, backend=backend,
+                               width=64)
+    ids_all, st_all = search(routed_topo, ds.queries, 10, backend=backend,
+                             width=64, nprobe=n_shards)
+    np.testing.assert_array_equal(ids_full, ids_all)
+    assert (st_all.n_distance_computations
+            == st_full.n_distance_computations + len(ds.queries) * n_shards)
+
+
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+def test_routed_nprobe2_recall_floor_and_distance_cut(routed_topo,
+                                                      routed_queries,
+                                                      backend):
+    """The routing win over the replicated ScaleGANN shards: nprobe=2 cuts
+    the distance budget >= 2x versus full scatter while holding
+    recall@10 >= 0.95 (the pallas split driver is shared with numpy and is
+    covered by the parity test above)."""
+    qs = routed_queries.queries
+    ids_full, st_full = search(routed_topo, qs, 10, backend=backend,
+                               width=64)
+    ids2, st2 = search(routed_topo, qs, 10, backend=backend, width=64,
+                       nprobe=2)
+    r2 = recall_at(ids2, routed_queries.gt, 10)
+    assert r2 >= 0.95, f"routed recall@10 {r2:.3f}"
+    cut = st_full.n_distance_computations / st2.n_distance_computations
+    assert cut >= 2.0, f"distance cut {cut:.2f}x"
+
+
+def test_routing_without_centroids_falls_back_to_scatter(ds, split):
+    """A topology that never carried centroids cannot route — nprobe must
+    silently preserve the full-scatter results."""
+    topo = ShardTopology(data=ds.data,
+                         shard_ids=[s.ids for s in split.shards],
+                         shard_graphs=split.shard_graphs)
+    assert topo.centroids is None
+    ids_n, st_n = search(topo, ds.queries[:8], 10, width=32)
+    ids_r, st_r = search(topo, ds.queries[:8], 10, width=32, nprobe=2)
+    np.testing.assert_array_equal(ids_n, ids_r)
+    assert st_n.n_distance_computations == st_r.n_distance_computations
+
+
+def test_nprobe_validation(ds, split):
+    with pytest.raises(ValueError, match="nprobe"):
+        search(split.topology(ds.data), ds.queries[:1], 10, width=32,
+               nprobe=0)
+
+
+def test_shard_entries_are_centroid_nearest(routed_topo):
+    """Each shard seeds from the local vector nearest its centroid."""
+    entries = routed_topo.shard_entries()
+    for s, ids in enumerate(routed_topo.shard_ids):
+        if len(ids) == 0:
+            continue
+        rows = routed_topo.data[ids].astype(np.float32)
+        d = ((rows - routed_topo.centroids[s][None, :]) ** 2).sum(axis=1)
+        assert d[entries[s]] == pytest.approx(d.min())
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tiny_shard_pools_are_padded(backend):
+    """Regression: a shard with fewer than k vectors returns a narrower
+    per-shard pool; the split driver must pad it to k columns instead of
+    relying on every shard contributing exactly k."""
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(23, 8)).astype(np.float32)
+    ids_a = np.arange(20, dtype=np.int64)
+    ids_b = np.arange(20, 23, dtype=np.int64)  # 3 < k = 5
+    graph_a = np.stack([(np.arange(20) + s) % 20 for s in (1, 2, 3, 4)],
+                       axis=1).astype(np.int32)
+    graph_b = np.stack([(np.arange(3) + s) % 3 for s in (1, 2)],
+                       axis=1).astype(np.int32)
+    cents = np.stack([data[:20].mean(axis=0), data[20:].mean(axis=0)])
+    topo = ShardTopology(data=data, shard_ids=[ids_a, ids_b],
+                         shard_graphs=[graph_a, graph_b], centroids=cents)
+    q = data[:4] + 0.01
+    d = ((data[None, :, :] - q[:, None, :]) ** 2).sum(-1)
+    expect = np.argsort(d, axis=1)[:, :5]
+    for nprobe in (None, 1, 2):
+        ids, _ = search(topo, q, 5, backend=backend, width=16, nprobe=nprobe)
+        assert ids.shape == (4, 5)
+        if nprobe != 1:  # full coverage -> exact global top-5
+            for row, exp in zip(ids, expect):
+                assert set(row.tolist()) == set(exp.tolist())
+
+
 def test_ip_metric_parity(ds, merged):
     """The retrieval-attention scoring path (metric="ip") works on every
     backend and agrees with brute force on the clear winners."""
@@ -179,7 +296,8 @@ def test_backend_registry():
         def search_merged(self, topo, queries, k, *, width, n_entries):
             return np.zeros((len(queries), k), np.int64), SearchStats(1, 1)
 
-        def search_split(self, topo, queries, k, *, width, n_entries):
+        def search_split(self, topo, queries, k, *, width, n_entries,
+                         nprobe=None):
             return np.zeros((len(queries), k), np.int64), SearchStats(1, 1)
 
     register_backend("fake", Fake())
