@@ -3,6 +3,8 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import asyncio
+
 import numpy as np
 
 from repro.configs.base import IndexConfig
@@ -10,6 +12,7 @@ from repro.core.builder import build_scalegann
 from repro.core.merge import connectivity_stats
 from repro.data.synthetic import make_clustered, recall_at
 from repro.search import search
+from repro.serving import AnnServer, ServerStats, ServingConfig
 
 
 def main():
@@ -43,7 +46,7 @@ def main():
     #    served directly (no merge), routing each query to its nprobe
     #    nearest shard centroids instead of broadcasting to all of them.
     shard_topo = res.shard_topology(ds.data)
-    for nprobe in (None, 2):
+    for nprobe in (None, 2, "auto"):
         ids, stats = search(shard_topo, ds.queries, k=10, backend="jax",
                             width=96, nprobe=nprobe)
         label = "scatter-all" if nprobe is None else f"nprobe={nprobe}"
@@ -51,6 +54,29 @@ def main():
               f"{recall_at(ids, ds.gt, 10):.3f}  "
               f"({stats.n_distance_computations / len(ds.queries):.0f} "
               f"distance computations / query)")
+
+    # 6. Serving: single-query traffic goes through repro.serving, which
+    #    micro-batches submit() calls into engine-sized search() batches
+    #    (flush at max_batch or max_wait_ms, whichever first).  See
+    #    examples/serve_ann.py for the open-loop load-generator version.
+    async def serve_a_few():
+        sc = ServingConfig(backend="jax", k=10, width=96, max_batch=32,
+                           max_wait_ms=2.0)
+        async with AnnServer(res.index, data=ds.data, config=sc) as srv:
+            # first round absorbs the server's startup (jit pretrace of
+            # its batch shapes); then measure a steady round
+            await asyncio.gather(*(srv.submit(q) for q in ds.queries))
+            srv.stats = ServerStats()
+            outs = await asyncio.gather(
+                *(srv.submit(q) for q in ds.queries)
+            )
+        ids = np.stack([o.ids for o in outs])
+        snap = srv.stats.snapshot()
+        print(f"[served] recall@10 = {recall_at(ids, ds.gt, 10):.3f}  "
+              f"p95 = {snap['latency_ms']['p95']:.1f} ms  "
+              f"mean batch = {snap['batch_occupancy']['mean']:.1f}")
+
+    asyncio.run(serve_a_few())
 
 
 if __name__ == "__main__":

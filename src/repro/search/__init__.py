@@ -19,8 +19,9 @@ Replaces the four divergent implementations that used to live in
 from repro.search.api import (SearchBackend, available_backends,  # noqa: F401
                               get_backend, register_backend, search)
 from repro.search.numpy_backend import beam_search  # noqa: F401
-from repro.search.types import (MergedTopology, SearchStats,  # noqa: F401
-                                ShardTopology, as_topology)
+from repro.search.types import (DEFAULT_AUTO_MARGIN,  # noqa: F401
+                                MergedTopology, NprobeSpec, SearchStats,
+                                ShardTopology, as_topology, parse_nprobe)
 
 __all__ = [
     "search",
@@ -33,4 +34,7 @@ __all__ = [
     "MergedTopology",
     "ShardTopology",
     "as_topology",
+    "NprobeSpec",
+    "parse_nprobe",
+    "DEFAULT_AUTO_MARGIN",
 ]

@@ -15,8 +15,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
-                                as_topology)
+from repro.search.types import (MergedTopology, NprobeSpec, SearchStats,
+                                ShardTopology, as_topology, parse_nprobe)
 
 
 @runtime_checkable
@@ -35,7 +35,7 @@ class SearchBackend(Protocol):
 
     def search_split(
         self, topo: ShardTopology, queries: np.ndarray, k: int, *,
-        width: int, n_entries: int, nprobe: int | None,
+        width: int, n_entries: int, nprobe: NprobeSpec,
     ) -> tuple[np.ndarray, SearchStats]: ...
 
 
@@ -83,7 +83,7 @@ def search(
     backend: str = "numpy",
     width: int = 64,
     n_entries: int = 16,
-    nprobe: int | None = None,
+    nprobe: NprobeSpec = None,
     data: np.ndarray | None = None,
     metric: str | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
@@ -103,18 +103,24 @@ def search(
     The default ``None`` — or a topology without centroids — preserves the
     full scatter-to-all-shards behavior; ``nprobe >= n_shards`` routes
     through the same machinery but covers every shard, returning the
-    scatter ids exactly (plus the counted routing tile).  Ignored on merged
-    topologies (a merged graph has no shards to prune).
+    scatter ids exactly (plus the counted routing tile).  ``nprobe="auto"``
+    — or ``("auto", margin)`` — adapts the probe count per query: every
+    shard whose centroid distance is within ``margin`` (default
+    :data:`~repro.search.types.DEFAULT_AUTO_MARGIN`) of the query's nearest
+    centroid is probed.  Ignored on merged topologies (a merged graph has
+    no shards to prune).
 
-    Returns ``(ids [Q, k] int64, SearchStats)``.
+    Returns ``(ids [Q, k] int64, SearchStats)``; the stats are stamped with
+    ``n_queries`` so callers that aggregate across calls (the
+    ``repro.serving`` worker) can merge with ``+=`` and keep per-query
+    averages exact.
     """
     if width < k:
         raise ValueError(
             f"width ({width}) must be >= k ({k}): the candidate list bounds "
             "how many results a beam search can return"
         )
-    if nprobe is not None and nprobe < 1:
-        raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+    parse_nprobe(nprobe)  # validate the spec before any backend work
     topo = as_topology(index_or_shards, data, metric=metric or "l2")
     if metric is not None and topo.metric != metric:
         # never mutate a caller-owned topology object
@@ -122,9 +128,12 @@ def search(
     impl = get_backend(backend)
     queries = np.asarray(queries, np.float32)
     if isinstance(topo, MergedTopology):
-        return impl.search_merged(
+        ids, stats = impl.search_merged(
             topo, queries, k, width=width, n_entries=n_entries
         )
-    return impl.search_split(
-        topo, queries, k, width=width, n_entries=n_entries, nprobe=nprobe
-    )
+    else:
+        ids, stats = impl.search_split(
+            topo, queries, k, width=width, n_entries=n_entries, nprobe=nprobe
+        )
+    stats.n_queries = len(queries)
+    return ids, stats

@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+from repro.search.types import (MergedTopology, NprobeSpec,
+                                SearchStats, ShardTopology,
                                 run_merged, run_split)
 
 
@@ -239,7 +240,7 @@ def search_split(
     width: int = 64,
     n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
-    nprobe: int | None = None,
+    nprobe: NprobeSpec = None,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(batch_beam_search, topo, queries, k, width=width,
                      n_iters=n_iters, nprobe=nprobe, bucket=True)

@@ -17,7 +17,8 @@ import heapq
 
 import numpy as np
 
-from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+from repro.search.types import (MergedTopology, NprobeSpec,
+                                SearchStats, ShardTopology,
                                 run_split)
 
 
@@ -153,7 +154,7 @@ def search_split(
     *,
     width: int = 64,
     n_entries: int = 16,  # unused: shards seed from their centroid entry
-    nprobe: int | None = None,
+    nprobe: NprobeSpec = None,
 ) -> tuple[np.ndarray, SearchStats]:
     """Split-only query path (GGNN / Extended CAGRA, §VI): route each query
     to its ``nprobe`` nearest shards (all shards when ``nprobe=None`` or the

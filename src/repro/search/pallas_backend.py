@@ -33,7 +33,8 @@ import numpy as np
 from repro.kernels.distance import pairwise_distance_pallas
 from repro.kernels.topk import merge_topk
 from repro.search.jax_backend import default_n_iters
-from repro.search.types import (MergedTopology, SearchStats, ShardTopology,
+from repro.search.types import (MergedTopology, NprobeSpec,
+                                SearchStats, ShardTopology,
                                 run_merged, run_split)
 
 _LANE = 128
@@ -225,7 +226,7 @@ def search_split(
     width: int = 64,
     n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
-    nprobe: int | None = None,
+    nprobe: NprobeSpec = None,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(kernel_beam_search, topo, queries, k, width=width,
                      n_iters=n_iters, nprobe=nprobe, bucket=True)

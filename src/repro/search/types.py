@@ -31,15 +31,31 @@ if typing.TYPE_CHECKING:  # import-time independence from repro.core
 
 @dataclasses.dataclass
 class SearchStats:
-    """The paper's latency/QPS proxy (Fig. 5): distance computations + hops."""
+    """The paper's latency/QPS proxy (Fig. 5): distance computations + hops.
+
+    ``n_queries`` is stamped by :func:`repro.search.search` on every call so
+    aggregating consumers (the ``repro.serving`` worker, benchmark loops) can
+    merge per-call stats with ``+=`` and still recover per-query averages
+    without threading batch sizes alongside.
+    """
 
     n_distance_computations: int = 0
     n_hops: int = 0
+    n_queries: int = 0
 
     def __iadd__(self, other: "SearchStats"):
         self.n_distance_computations += other.n_distance_computations
         self.n_hops += other.n_hops
+        self.n_queries += other.n_queries
         return self
+
+    def per_query(self) -> dict:
+        """Mean distance computations / hops per query (0 when empty)."""
+        q = max(self.n_queries, 1)
+        return {
+            "distance_computations": self.n_distance_computations / q,
+            "hops": self.n_hops / q,
+        }
 
 
 @dataclasses.dataclass
@@ -190,6 +206,54 @@ def pad_pool(
             np.concatenate([d, pad_d], axis=1))
 
 
+# default centroid-distance margin for nprobe="auto": a shard is probed when
+# its (squared-L2 / negated-dot) centroid distance is within 25% of the
+# query's nearest centroid distance
+DEFAULT_AUTO_MARGIN = 1.25
+
+NprobeSpec = typing.Union[int, str, tuple, None]
+
+
+def parse_nprobe(nprobe: NprobeSpec) -> tuple[str, int, float]:
+    """Normalize an ``nprobe`` spec to ``(mode, count, margin)``.
+
+    Accepted forms — ``None`` (scatter to every shard), a positive int
+    (fixed probe count), ``"auto"`` (adaptive per-query count by
+    centroid-distance margin, :data:`DEFAULT_AUTO_MARGIN`), or
+    ``("auto", margin)`` with an explicit ``margin >= 1``.  The spec stays a
+    plain hashable value on purpose: the serving layer groups per-request
+    options by it, and the backend protocol keeps its single ``nprobe``
+    keyword.
+    """
+    if nprobe is None:
+        return "scatter", 0, 0.0
+    if isinstance(nprobe, str):
+        if nprobe != "auto":
+            raise ValueError(
+                f"nprobe must be an int, 'auto', or ('auto', margin); "
+                f"got {nprobe!r}"
+            )
+        return "auto", 0, DEFAULT_AUTO_MARGIN
+    if isinstance(nprobe, tuple):
+        if (len(nprobe) != 2 or nprobe[0] != "auto"
+                or not isinstance(nprobe[1], (int, float))):
+            raise ValueError(
+                f"tuple nprobe must be ('auto', margin); got {nprobe!r}"
+            )
+        margin = float(nprobe[1])
+        if margin < 1.0:
+            raise ValueError(f"auto-nprobe margin must be >= 1, got {margin}")
+        return "auto", 0, margin
+    if isinstance(nprobe, bool):  # bool subclasses int; reject it
+        raise ValueError(f"nprobe must be a count, got {nprobe!r}")
+    n = int(nprobe)
+    if n != nprobe:  # 2.7 would silently probe fewer shards than asked
+        raise ValueError(f"nprobe must be integral, got {nprobe!r}")
+    if n < 1:
+        raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+    return "fixed", n, 0.0
+
+
 def _bucket_size(m: int) -> int:
     """Smallest bucketed batch size >= m: multiples of an eighth of the
     enclosing power of two (…, 8, 9, …, 16, 18, 20, …, 32, 36, …), so
@@ -204,7 +268,7 @@ def _bucket_size(m: int) -> int:
 
 def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
               width: int, n_iters: int | None = None,
-              nprobe: int | None = None, bucket: bool = False):
+              nprobe: NprobeSpec = None, bucket: bool = False):
     """Shared split-topology driver: centroid-routed scatter + global re-rank.
 
     With ``nprobe`` set and centroids available, one batched query×centroid
@@ -214,7 +278,11 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     without centroids — scatters every query to every shard, the
     pre-routing behavior; ``nprobe >= n_shards`` still routes (the tile is
     computed and counted) but covers every shard, so it returns the scatter
-    ids exactly.  Either way each shard search seeds from the local vector
+    ids exactly.  ``nprobe="auto"`` (or ``("auto", margin)``, see
+    :func:`parse_nprobe`) picks the probe count *per query* from the same
+    tile: every shard whose centroid distance is within ``margin`` of the
+    query's nearest centroid is probed, so easy queries (deep inside one
+    cluster) pay for one shard while boundary queries fan out.  Either way each shard search seeds from the local vector
     nearest its centroid (:meth:`ShardTopology.shard_entries`; local row 0
     without centroids), and per-shard beam scores are exact so the re-rank
     reuses them — no extra distance computations.  The routing tile itself
@@ -231,20 +299,33 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     queries = np.asarray(queries, np.float32)
     nq = len(queries)
     stats = SearchStats()
-    if nprobe is not None and nprobe < 1:
-        raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+    mode, count, margin = parse_nprobe(nprobe)
     live = [s for s, ids in enumerate(topo.shard_ids) if len(ids) > 0]
     if not live or nq == 0:
         return np.full((nq, k), -1, np.int64), stats
     n_live = len(live)
-    route = nprobe is not None and topo.centroids is not None
+    route = mode != "scatter" and topo.centroids is not None
     if route:
         cent = np.asarray(topo.centroids, np.float32)[live]
         qc = _query_centroid_distances(queries, cent, topo.metric)
         stats.n_distance_computations += nq * n_live
-        # [Q, nprobe] positions into `live`, nearest shard first
-        probes = np.argsort(qc, axis=1, kind="stable")[:, :min(nprobe,
-                                                               n_live)]
+        # [Q, n_live] positions into `live`, nearest shard first
+        order = np.argsort(qc, axis=1, kind="stable")
+        if mode == "fixed":
+            probes = order[:, :min(count, n_live)]
+        else:
+            # adaptive: probe every shard whose centroid distance is within
+            # `margin` of the query's nearest (d <= d1 + (margin-1)·|d1|,
+            # which is margin·d1 for the non-negative squared-L2 case and
+            # degrades gracefully for negated inner products); distances
+            # are sorted, so the kept set is a per-query prefix and -1
+            # marks each query's unused probe slots
+            sd = np.take_along_axis(qc, order, axis=1)
+            d1 = sd[:, :1]
+            keep = sd <= d1 + (margin - 1.0) * np.abs(d1)
+            keep[:, 0] = True  # the nearest shard is always probed
+            probes = np.where(keep, order, -1)
+            probes = probes[:, : int(keep.sum(axis=1).max())]
     else:
         probes = np.broadcast_to(
             np.arange(n_live), (nq, n_live)

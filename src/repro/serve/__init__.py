@@ -1,0 +1,18 @@
+"""``repro.serve`` — the **LM decode** serving engine (language-model
+substrate): static-slot continuous batching over prefill/decode steps.
+
+Not the ANN query server.  ANN query serving — async micro-batching of
+single-query requests into :func:`repro.search.search` batches — lives in
+``repro.serving`` (:class:`repro.serving.AnnServer`).  This package
+deliberately re-exports nothing ANN-related so the two layers can't be
+confused: ``repro.serve`` = tokens out of a language model,
+``repro.serving`` = neighbor ids out of an ANN index.
+
+(``repro.serve.retrieval_attention`` *consumes* the ANN engine for
+retrieval-sparse attention, but exposes no search API of its own.)
+"""
+
+from repro.serve.engine import (Request, ServeConfig,  # noqa: F401
+                                ServeEngine, serve_step_fn)
+
+__all__ = ["ServeEngine", "ServeConfig", "Request", "serve_step_fn"]

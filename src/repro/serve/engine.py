@@ -1,4 +1,9 @@
-"""Batched serving engine: prefill + decode loop with a slot-based batch.
+"""Batched **LM decode** serving engine: prefill + decode with slot batching.
+
+Naming: this module serves *language-model tokens*.  The ANN *query*
+server — async micro-batching of single-vector requests into
+``repro.search.search`` batches — is ``repro.serving``
+(:class:`repro.serving.AnnServer`); nothing ANN-related lives here.
 
 The paper's resource split puts *query serving on CPUs* for ANN search; the
 LM substrate mirrors the same philosophy: serving is a long-running,

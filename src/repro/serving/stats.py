@@ -1,0 +1,149 @@
+"""Serving telemetry: end-to-end latency percentiles, batch occupancy, QPS.
+
+The serving layer's whole reason to exist is a throughput/latency trade —
+micro-batching rides the engine's batch-256 sweet spot at the cost of a
+bounded queueing delay — so the server measures both sides of that trade
+for every request: wall-clock end-to-end latency (submit → result, queueing
+included) and the batch occupancy the engine actually saw.  Engine-side
+work (distance computations, hops) is folded in from the per-call
+:class:`~repro.search.SearchStats` the worker gets back from
+``repro.search.search``.
+"""
+
+from __future__ import annotations
+
+import random
+from collections import Counter
+
+import numpy as np
+
+from repro.search import SearchStats
+
+
+class ServerStats:
+    """Aggregate telemetry for one :class:`~repro.serving.AnnServer`.
+
+    Latencies are kept in a bounded reservoir (uniform reservoir sampling
+    past ``latency_cap`` samples, seeded — deterministic under a fixed
+    submit order) so a long-running server's percentiles stay O(1) memory.
+    Distance-computation accounting is exact when the worker pads nothing;
+    with shape-bucket padding it is scaled by the real/padded lane ratio
+    (padding lanes recompute real rows, so the scaled value is the honest
+    per-request cost).
+    """
+
+    def __init__(self, latency_cap: int = 100_000):
+        self.n_completed = 0
+        self.n_rejected = 0  # admission "reject": submitter got the error
+        self.n_shed = 0  # admission "shed": oldest queued request failed
+        self.n_failed = 0  # engine error propagated to the future
+        self.n_batches = 0
+        self.n_served_lanes = 0  # real (non-padding) lanes sent to the engine
+        self.n_padded_lanes = 0  # bucket-padding lanes across all batches
+        self.search = SearchStats()  # raw engine counters (padded lanes in)
+        self.dist_comps = 0.0  # padding-scaled distance computations
+        self.hops = 0.0
+        self.batch_time_s = 0.0  # engine service time, sum over batches
+        self._lat_cap = int(latency_cap)
+        self._lat: list[float] = []  # seconds, reservoir
+        self._n_lat = 0
+        self._rng = random.Random(0)
+        self._occ = Counter()  # real batch occupancy histogram
+        self._t_first: float | None = None  # earliest submit seen
+        self._t_last: float | None = None  # latest completion seen
+
+    # ---- recording (called by the server/queue, clock units = seconds) ----
+
+    def record_rejected(self) -> None:
+        self.n_rejected += 1
+
+    def record_shed(self) -> None:
+        self.n_shed += 1
+
+    def record_failed(self, n: int = 1) -> None:
+        self.n_failed += n
+
+    def record_completion(self, t_submit: float, t_done: float) -> None:
+        self.n_completed += 1
+        self._t_first = (t_submit if self._t_first is None
+                         else min(self._t_first, t_submit))
+        self._t_last = (t_done if self._t_last is None
+                        else max(self._t_last, t_done))
+        lat = max(t_done - t_submit, 0.0)
+        self._n_lat += 1
+        if len(self._lat) < self._lat_cap:
+            self._lat.append(lat)
+        else:
+            j = self._rng.randrange(self._n_lat)
+            if j < self._lat_cap:
+                self._lat[j] = lat
+
+    def observe_batch(self, n_real: int, n_padded: int, stats: SearchStats,
+                      elapsed_s: float) -> None:
+        """One engine call: ``n_real`` requests served in a lane count of
+        ``n_padded`` (== ``n_real`` when the worker didn't bucket-pad)."""
+        self.n_batches += 1
+        self._occ[int(n_real)] += 1
+        self.n_served_lanes += n_real
+        self.n_padded_lanes += max(n_padded - n_real, 0)
+        self.search += stats
+        scale = n_real / max(n_padded, 1)
+        self.dist_comps += stats.n_distance_computations * scale
+        self.hops += stats.n_hops * scale
+        self.batch_time_s += elapsed_s
+
+    # ---- reading --------------------------------------------------------
+
+    def latency_ms(self) -> dict:
+        if not self._lat:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0,
+                    "max": 0.0}
+        a = np.asarray(self._lat, np.float64) * 1e3
+        return {
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()),
+            "max": float(a.max()),
+        }
+
+    def occupancy(self) -> dict:
+        total = sum(self._occ.values())
+        if not total:
+            return {"mean": 0.0, "max": 0, "histogram": {}}
+        return {
+            "mean": sum(s * c for s, c in self._occ.items()) / total,
+            "max": max(self._occ),
+            "histogram": {str(s): self._occ[s] for s in sorted(self._occ)},
+        }
+
+    def qps(self) -> float:
+        if (self._t_first is None or self._t_last is None
+                or self._t_last <= self._t_first):
+            return 0.0
+        return self.n_completed / (self._t_last - self._t_first)
+
+    def snapshot(self) -> dict:
+        """One JSON-ready block: the telemetry a dashboard (or the serving
+        benchmark) wants per measurement window."""
+        # per-query engine work is normalized by lanes actually *served*
+        # (not completions: a cancelled request's lane still did the work,
+        # and charging it to the survivors would inflate their cost)
+        served = max(self.n_served_lanes, 1)
+        lanes = self.search.n_queries
+        return {
+            "n_completed": self.n_completed,
+            "n_rejected": self.n_rejected,
+            "n_shed": self.n_shed,
+            "n_failed": self.n_failed,
+            "n_batches": self.n_batches,
+            "qps": self.qps(),
+            "latency_ms": self.latency_ms(),
+            "batch_occupancy": self.occupancy(),
+            "padding_fraction": (self.n_padded_lanes / lanes) if lanes else 0.0,
+            "distance_computations_per_query": self.dist_comps / served,
+            "hops_per_query": self.hops / served,
+            "engine_time_ms_per_batch":
+                (self.batch_time_s / self.n_batches * 1e3)
+                if self.n_batches else 0.0,
+        }

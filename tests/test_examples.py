@@ -25,6 +25,13 @@ def test_quickstart():
     assert "recall@10" in p.stdout
 
 
+def test_serve_ann():
+    p = _run("serve_ann.py")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "achieved QPS" in p.stdout
+    assert "recall@10" in p.stdout
+
+
 def test_serve_lm():
     p = _run("serve_lm.py", "--requests", "2", "--max-new", "4")
     assert p.returncode == 0, p.stderr[-2000:]

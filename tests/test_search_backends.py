@@ -190,6 +190,71 @@ def test_routed_nprobe2_recall_floor_and_distance_cut(routed_topo,
     assert cut >= 2.0, f"distance cut {cut:.2f}x"
 
 
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+def test_auto_nprobe_margin_extremes_match_fixed(ds, routed_topo, backend):
+    """Adaptive routing is a strict generalization of fixed nprobe: margin
+    1.0 keeps only the nearest shard (== nprobe=1) and an unbounded margin
+    keeps every shard (== nprobe=n_shards), id-for-id."""
+    n_shards = len(routed_topo.shard_ids)
+    qs = ds.queries
+    ids_1, st_1 = search(routed_topo, qs, 10, backend=backend, width=64,
+                         nprobe=1)
+    ids_m1, st_m1 = search(routed_topo, qs, 10, backend=backend, width=64,
+                           nprobe=("auto", 1.0))
+    np.testing.assert_array_equal(ids_1, ids_m1)
+    assert st_1.n_distance_computations == st_m1.n_distance_computations
+    ids_all, _ = search(routed_topo, qs, 10, backend=backend, width=64,
+                        nprobe=n_shards)
+    ids_huge, _ = search(routed_topo, qs, 10, backend=backend, width=64,
+                         nprobe=("auto", 1e9))
+    np.testing.assert_array_equal(ids_all, ids_huge)
+
+
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+def test_auto_nprobe_beats_fixed_at_same_budget(routed_topo, routed_queries,
+                                                backend):
+    """The adaptive margin spends the probe budget where it matters
+    (boundary queries fan out, easy queries stay cheap): at the default
+    margin it must hold the fixed-nprobe=2 recall floor with *fewer*
+    distance computations than scatter, and beat nprobe=1's recall."""
+    qs = routed_queries.queries
+    ids_a, st_a = search(routed_topo, qs, 10, backend=backend, width=64,
+                         nprobe="auto")
+    _, st_full = search(routed_topo, qs, 10, backend=backend, width=64,
+                        nprobe=len(routed_topo.shard_ids))
+    ids_1, _ = search(routed_topo, qs, 10, backend=backend, width=64,
+                      nprobe=1)
+    r_a = recall_at(ids_a, routed_queries.gt, 10)
+    r_1 = recall_at(ids_1, routed_queries.gt, 10)
+    assert r_a >= 0.95, f"auto recall@10 {r_a:.3f}"
+    assert r_a > r_1
+    assert (st_a.n_distance_computations
+            < 0.5 * st_full.n_distance_computations)
+
+
+def test_parse_nprobe_specs(ds, routed_topo):
+    from repro.search import parse_nprobe
+
+    assert parse_nprobe(None)[0] == "scatter"
+    assert parse_nprobe(3) == ("fixed", 3, 0.0)
+    mode, _, margin = parse_nprobe("auto")
+    assert mode == "auto" and margin > 1.0
+    assert parse_nprobe(("auto", 2.0)) == ("auto", 0, 2.0)
+    assert parse_nprobe(2.0) == ("fixed", 2, 0.0)  # integral floats pass
+    for bad in (0, -1, 2.7, True, "margin", ("auto", 0.5), ("fixed", 2),
+                ("auto",)):
+        with pytest.raises(ValueError, match="nprobe|margin"):
+            search(routed_topo, ds.queries[:1], 10, width=32, nprobe=bad)
+
+
+def test_search_stamps_n_queries(ds, merged):
+    ids, st = search(merged.index, ds.queries[:7], 10, data=ds.data)
+    assert st.n_queries == 7
+    per_q = st.per_query()
+    assert per_q["distance_computations"] == pytest.approx(
+        st.n_distance_computations / 7)
+
+
 def test_routing_without_centroids_falls_back_to_scatter(ds, split):
     """A topology that never carried centroids cannot route — nprobe must
     silently preserve the full-scatter results."""
