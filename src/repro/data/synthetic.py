@@ -53,11 +53,15 @@ def make_clustered(
         size=(n_queries, d)
     ).astype(np.float32)
     if dtype == "uint8":
+        # BIGANN/Deep-style byte vectors: affine-map the gaussians onto the
+        # full code range with *rounding* (truncation would bias every
+        # element −0.5 code on average and skew the quantized-parity
+        # fixtures the dtype-staged search path is tested on)
         lo, hi = data.min(), data.max()
-        data = np.clip((data - lo) / (hi - lo) * 255, 0, 255).astype(np.uint8)
-        queries = np.clip((queries - lo) / (hi - lo) * 255, 0, 255).astype(
-            np.uint8
-        )
+        data = np.clip(np.round((data - lo) / (hi - lo) * 255),
+                       0, 255).astype(np.uint8)
+        queries = np.clip(np.round((queries - lo) / (hi - lo) * 255),
+                          0, 255).astype(np.uint8)
     gt = exact_ground_truth(data, queries, gt_k, metric)
     return Dataset(
         name=name or f"synthetic_{n}x{d}_{dtype}",

@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # MXU-aligned default tile. (bm, D) + (bn, D) + (bm, bn) fp32 panels must fit
 # VMEM (~16 MB): D=4096 → 128·4096·4·2 + 128·128·4 ≈ 4.3 MB.
@@ -29,6 +30,8 @@ BLOCK_N = 128
 
 
 def _distance_kernel(q_ref, x_ref, out_ref, *, metric: str):
+    """f32 *and* bf16 tiles: panels are upcast at the VMEM→VREG boundary,
+    so a bf16 input halves the HBM traffic while the MXU accumulates f32."""
     q = q_ref[...].astype(jnp.float32)  # [bm, D]
     x = x_ref[...].astype(jnp.float32)  # [bn, D]
     # MXU: [bm, D] @ [D, bn]
@@ -41,6 +44,78 @@ def _distance_kernel(q_ref, x_ref, out_ref, *, metric: str):
         out_ref[...] = jnp.maximum(qn + xn - 2.0 * dots, 0.0)
     else:  # ip
         out_ref[...] = -dots
+
+
+def _distance_kernel_u8(q_ref, x_ref, s_ref, zp_ref, out_ref, *,
+                        metric: str, d_real: int):
+    """Integer-accumulated distance tile over shared-spec uint8 codes.
+
+    The panels stream HBM→VMEM at 1 byte/element (4× less traffic than the
+    f32 kernel); the MXU matmul accumulates int32 over the codes and the
+    affine correction runs on the VPU in f32.  ``scale``/``zero_point``
+    arrive as (1, 1) SMEM scalars so per-shard specs don't recompile the
+    kernel; ``d_real`` is the pre-padding dimension (zero codes pad D —
+    they cancel in L2 and contribute nothing to the IP sums, but the
+    ``D·zp²`` affine term must use the true D).
+    """
+    qi = q_ref[...].astype(jnp.int32)  # [bm, D] codes
+    xi = x_ref[...].astype(jnp.int32)  # [bn, D] codes
+    s = s_ref[0, 0]
+    dots = jax.lax.dot_general(
+        qi, xi, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # [bm, bn] exact
+    if metric == "l2":
+        # shared zero-point cancels: d = s²·‖cq − cx‖²
+        qn = jnp.sum(qi * qi, axis=1, keepdims=True)
+        xn = jnp.sum(xi * xi, axis=1)[None, :]
+        d_codes = (qn + xn - 2 * dots).astype(jnp.float32)
+        out_ref[...] = jnp.maximum(d_codes, 0.0) * (s * s)
+    else:  # ip: q·x = s²·cq·cx + s·zp·(Σcq + Σcx) + D·zp²  (absolute score)
+        zp = zp_ref[0, 0]
+        sq = jnp.sum(qi, axis=1, keepdims=True).astype(jnp.float32)
+        sx = jnp.sum(xi, axis=1)[None, :].astype(jnp.float32)
+        out_ref[...] = -(s * s * dots.astype(jnp.float32)
+                         + s * zp * (sq + sx) + d_real * zp * zp)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "d_real", "block_m", "block_n", "interpret"),
+)
+def pairwise_distance_u8_pallas(
+    cq: jax.Array,
+    cx: jax.Array,
+    scale: jax.Array,  # (1, 1) f32
+    zero_point: jax.Array,  # (1, 1) f32
+    *,
+    metric: str = "l2",
+    d_real: int | None = None,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> jax.Array:
+    """[M, D] × [N, D] uint8 codes → [M, N] float32 distances.  M, N, D must
+    be multiples of the block/lane sizes — ``ops.pairwise_distance_u8``
+    handles padding (zero codes)."""
+    m, d = cq.shape
+    n, _ = cx.shape
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_distance_kernel_u8, metric=metric,
+                          d_real=d if d_real is None else d_real),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(cq, cx, scale, zero_point)
 
 
 @functools.partial(

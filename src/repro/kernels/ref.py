@@ -41,6 +41,62 @@ def pairwise_distance(q, x, metric: str = "l2") -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Quantized distances (uint8 affine codes, integer accumulation)
+# ---------------------------------------------------------------------------
+
+
+def pairwise_l2_u8(cq: jax.Array, cx: jax.Array, scale) -> jax.Array:
+    """Squared L2 from shared-spec uint8 codes: ``scale² · ‖cq − cx‖²``.
+
+    Both operands carry codes from the *same* affine spec
+    ``x ≈ zero_point + scale·code``, so the zero-point cancels and the whole
+    distance is one int32-accumulated code matmul — the MXU shape the
+    Pallas kernel uses.  cq: [M, D] uint8, cx: [N, D] uint8 → [M, N] f32.
+    """
+    qi = cq.astype(jnp.int32)
+    xi = cx.astype(jnp.int32)
+    qn = jnp.sum(qi * qi, axis=-1, keepdims=True)  # [M, 1]
+    xn = jnp.sum(xi * xi, axis=-1)[None, :]  # [1, N]
+    d_codes = qn + xn - 2 * (qi @ xi.T)  # exact int32
+    s = jnp.asarray(scale, jnp.float32)
+    return jnp.maximum(d_codes.astype(jnp.float32), 0.0) * (s * s)
+
+
+def pairwise_ip_u8(
+    cq: jax.Array, cx: jax.Array, scale, zero_point, d_real: int
+) -> jax.Array:
+    """Negative inner product from shared-spec uint8 codes.
+
+    With x = zp + s·c:  q·x = s²·cq·cx + s·zp·(Σcq + Σcx) + D·zp².  All
+    terms are kept (not just the per-query-constant-free ones) so the score
+    is an *absolute* approximation of −q·x — per-shard specs stay
+    comparable after the f32 re-rank.  ``d_real`` is the unpadded dimension
+    (zero-code padding contributes nothing to the sums or the dot).
+    """
+    qi = cq.astype(jnp.int32)
+    xi = cx.astype(jnp.int32)
+    s = jnp.asarray(scale, jnp.float32)
+    zp = jnp.asarray(zero_point, jnp.float32)
+    dots = (qi @ xi.T).astype(jnp.float32)  # [M, N] exact int32
+    sq = jnp.sum(qi, axis=-1, keepdims=True).astype(jnp.float32)  # [M, 1]
+    sx = jnp.sum(xi, axis=-1)[None, :].astype(jnp.float32)  # [1, N]
+    return -(s * s * dots + s * zp * (sq + sx) + d_real * zp * zp)
+
+
+def pairwise_distance_u8(
+    cq: jax.Array, cx: jax.Array, scale, zero_point, metric: str = "l2",
+    d_real: int | None = None,
+) -> jax.Array:
+    """Uint8-code distances matching :func:`pairwise_distance` semantics."""
+    if metric == "l2":
+        return pairwise_l2_u8(cq, cx, scale)
+    if metric == "ip":
+        return pairwise_ip_u8(cq, cx, scale, zero_point,
+                              cq.shape[-1] if d_real is None else d_real)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+# ---------------------------------------------------------------------------
 # k-NN (distance + selection)
 # ---------------------------------------------------------------------------
 

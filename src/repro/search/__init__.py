@@ -20,8 +20,10 @@ from repro.search.api import (SearchBackend, available_backends,  # noqa: F401
                               get_backend, register_backend, search)
 from repro.search.numpy_backend import beam_search  # noqa: F401
 from repro.search.types import (DEFAULT_AUTO_MARGIN,  # noqa: F401
-                                MergedTopology, NprobeSpec, SearchStats,
-                                ShardTopology, as_topology, parse_nprobe)
+                                DEFAULT_RERANK, SEARCH_DTYPES,
+                                MergedTopology, NprobeSpec, QuantSpec,
+                                SearchStats, ShardTopology, as_topology,
+                                parse_dtype, parse_nprobe)
 
 __all__ = [
     "search",
@@ -37,4 +39,8 @@ __all__ = [
     "NprobeSpec",
     "parse_nprobe",
     "DEFAULT_AUTO_MARGIN",
+    "QuantSpec",
+    "parse_dtype",
+    "SEARCH_DTYPES",
+    "DEFAULT_RERANK",
 ]

@@ -15,8 +15,9 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.search.types import (MergedTopology, NprobeSpec, SearchStats,
-                                ShardTopology, as_topology, parse_nprobe)
+from repro.search.types import (DEFAULT_RERANK, MergedTopology, NprobeSpec,
+                                SearchStats, ShardTopology, as_topology,
+                                parse_dtype, parse_nprobe)
 
 
 @runtime_checkable
@@ -25,17 +26,20 @@ class SearchBackend(Protocol):
 
     Both methods return ``(ids [Q, k] int64, SearchStats)``; unused result
     slots are -1.  Modules satisfy this protocol (the built-ins are plain
-    modules exposing the two functions).
+    modules exposing the two functions).  ``dtype``/``rerank`` select the
+    staged-precision distance path (see :func:`search`); backends that
+    share the ``run_merged``/``run_split`` drivers get it for free.
     """
 
     def search_merged(
         self, topo: MergedTopology, queries: np.ndarray, k: int, *,
-        width: int, n_entries: int,
+        width: int, n_entries: int, dtype: str, rerank: int,
     ) -> tuple[np.ndarray, SearchStats]: ...
 
     def search_split(
         self, topo: ShardTopology, queries: np.ndarray, k: int, *,
-        width: int, n_entries: int, nprobe: NprobeSpec,
+        width: int, n_entries: int, nprobe: NprobeSpec, dtype: str,
+        rerank: int,
     ) -> tuple[np.ndarray, SearchStats]: ...
 
 
@@ -84,6 +88,8 @@ def search(
     width: int = 64,
     n_entries: int = 16,
     nprobe: NprobeSpec = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
     data: np.ndarray | None = None,
     metric: str | None = None,
 ) -> tuple[np.ndarray, SearchStats]:
@@ -110,6 +116,22 @@ def search(
     centroid is probed.  Ignored on merged topologies (a merged graph has
     no shards to prune).
 
+    ``dtype`` — the staged-precision distance path (PilotANN-style: cheap
+    traversal, exact finish).  ``"f32"`` (default) is bit-identical to the
+    historical path.  ``"bf16"`` streams vectors as bfloat16 (half the
+    memory traffic, f32 accumulation); ``"uint8"`` traverses on affine
+    uint8 codes with integer-accumulated distances
+    (:class:`~repro.search.QuantSpec`, learned per shard for split
+    topologies).  Either staged dtype has the beam rank ``rerank·k``
+    candidates (clamped to ``width``) on quantized distances, then re-ranks
+    them *exactly* in f32 — the stats report the quantized/re-rank split
+    via ``n_quantized_distance_computations`` /
+    ``n_rerank_distance_computations``.  The quantized storage views are
+    cached *on the topology object*: callers looping staged searches
+    should build a topology once and reuse it (a bare ``GlobalIndex`` /
+    ``(ids, graphs)`` input is adapted to a fresh topology per call, which
+    re-runs the quantization data pass every time).
+
     Returns ``(ids [Q, k] int64, SearchStats)``; the stats are stamped with
     ``n_queries`` so callers that aggregate across calls (the
     ``repro.serving`` worker) can merge with ``+=`` and keep per-query
@@ -121,6 +143,13 @@ def search(
             "how many results a beam search can return"
         )
     parse_nprobe(nprobe)  # validate the spec before any backend work
+    parse_dtype(dtype)
+    if isinstance(rerank, bool) or int(rerank) != rerank or rerank < 1:
+        raise ValueError(
+            f"rerank must be a positive int (re-rank rerank·k candidates), "
+            f"got {rerank!r}"
+        )
+    rerank = int(rerank)
     topo = as_topology(index_or_shards, data, metric=metric or "l2")
     if metric is not None and topo.metric != metric:
         # never mutate a caller-owned topology object
@@ -129,11 +158,13 @@ def search(
     queries = np.asarray(queries, np.float32)
     if isinstance(topo, MergedTopology):
         ids, stats = impl.search_merged(
-            topo, queries, k, width=width, n_entries=n_entries
+            topo, queries, k, width=width, n_entries=n_entries,
+            dtype=dtype, rerank=rerank,
         )
     else:
         ids, stats = impl.search_split(
-            topo, queries, k, width=width, n_entries=n_entries, nprobe=nprobe
+            topo, queries, k, width=width, n_entries=n_entries,
+            nprobe=nprobe, dtype=dtype, rerank=rerank,
         )
     stats.n_queries = len(queries)
     return ids, stats

@@ -46,8 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.search.types import (MergedTopology, NprobeSpec,
-                                SearchStats, ShardTopology,
+from repro.search.types import (DEFAULT_RERANK, MergedTopology, NprobeSpec,
+                                QuantSpec, SearchStats, ShardTopology,
                                 run_merged, run_split)
 
 
@@ -60,33 +60,67 @@ def default_n_iters(width: int) -> int:
     jax.jit, static_argnames=("k", "width", "n_iters", "expand", "metric")
 )
 def _batch_beam(
-    x: jax.Array,  # [N, D] f32
+    x: jax.Array,  # [N, D] storage: f32, bf16, or uint8 affine codes
     graph: jax.Array,  # [N, R] int32
     entries: jax.Array,  # [E] int32 seed ids (E <= width)
-    queries: jax.Array,  # [Q, D] f32
+    queries: jax.Array,  # [Q, D] f32 / bf16, or [Q, D] int32 query codes
     k: int,
     width: int,
     n_iters: int,
     expand: int,
     metric: str,
+    scale: jax.Array,  # f32 scalar QuantSpec params (uint8 storage only;
+    zp: jax.Array,  # traced, so per-shard specs never retrace)
 ):
     """Returns (ids [Q,k] int32 with -1 padding, dists [Q,k], n_dist [Q],
-    hops [Q])."""
+    hops [Q]).
+
+    The storage dtype selects the distance stage at trace time: f32 is the
+    historical exact path; bf16 streams 2-byte rows and accumulates f32;
+    uint8 gathers 1-byte code rows and accumulates the distance in int32
+    (``scale``/``zp`` turn code distances into absolute f32 scores, so
+    quantized dists from different shards stay mergeable).
+    """
     n = x.shape[0]
     r = graph.shape[1]
+    d_real = x.shape[1]
     n_entries = entries.shape[0]
     n_new = expand * r
     sentinel = jnp.int32(n)  # spill id: gathers/scatters of masked slots
-    xn = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32), axis=1)
+    is_u8 = x.dtype == jnp.uint8
+    if is_u8:
+        xi_n = jnp.sum(x.astype(jnp.int32) ** 2, axis=1)  # code norms
+        xi_s = jnp.sum(x.astype(jnp.int32), axis=1)  # code sums (ip)
+    else:
+        xn = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32), axis=1)
 
     def one(qv):
-        def score(ids):
-            """‖x‖² − 2·q·x (L2 ranking without the per-query constant) or
-            −q·x for inner product."""
-            dots = x[ids] @ qv
-            if metric == "ip":
-                return -dots
-            return xn[ids] - 2.0 * dots
+        if is_u8:
+            cqn = qv @ qv  # int32: query-code norm
+            cqs = jnp.sum(qv)
+
+            def score(ids):
+                """Absolute quantized distance from int32-accumulated
+                code dot products (see ``QuantSpec``)."""
+                rows = x[ids].astype(jnp.int32)
+                dots = rows @ qv
+                if metric == "ip":
+                    return -(scale * scale * dots.astype(jnp.float32)
+                             + scale * zp
+                             * (cqs + xi_s[ids]).astype(jnp.float32)
+                             + d_real * zp * zp)
+                d_codes = (xi_n[ids] + cqn - 2 * dots).astype(jnp.float32)
+                return jnp.maximum(d_codes, 0.0) * (scale * scale)
+        else:
+            qf = qv.astype(jnp.float32)
+
+            def score(ids):
+                """‖x‖² − 2·q·x (L2 ranking without the per-query
+                constant) or −q·x for inner product."""
+                dots = x[ids].astype(jnp.float32) @ qf
+                if metric == "ip":
+                    return -dots
+                return xn[ids] - 2.0 * dots
 
         pad = width - n_entries
         cand_ids = jnp.concatenate(
@@ -172,8 +206,10 @@ def _batch_beam(
             jnp.isfinite(neg_top) & (ids[top] != sentinel), ids[top], -1
         )
         out_d = ds[top]
-        if metric != "ip":
-            out_d = out_d + qv @ qv  # restore the true squared-L2 value
+        if metric != "ip" and not is_u8:
+            # restore the true squared-L2 value (uint8 scores are already
+            # absolute: the shared zero-point cancelled inside `score`)
+            out_d = out_d + qf @ qf
         return out_ids, out_d, n_dist, hops
 
     return jax.vmap(one)(queries)
@@ -182,6 +218,28 @@ def _batch_beam(
 def _prep_entries(entries, width: int) -> np.ndarray:
     e = np.atleast_1d(np.asarray(entries, np.int64))[:width]
     return e.astype(np.int32)
+
+
+def _prep_stage(data, queries, quant):
+    """(x, q, scale, zp) device inputs for one distance stage.
+
+    ``quant=None`` — exact f32 (any raw input dtype is cast, the historical
+    path); ``"bf16"`` — data is a bf16 copy, queries round to bf16;
+    :class:`QuantSpec` — data is uint8 codes, queries are quantized with
+    the same spec into int32 code vectors.
+    """
+    if isinstance(quant, QuantSpec):
+        x = jnp.asarray(np.asarray(data))
+        q = jnp.asarray(quant.quantize(queries).astype(np.int32))
+        return x, q, jnp.float32(quant.scale), jnp.float32(quant.zero_point)
+    if quant == "bf16":
+        x = jnp.asarray(data)
+        q = jnp.asarray(np.asarray(queries, np.float32)).astype(
+            jnp.bfloat16)
+        return x, q, jnp.float32(0), jnp.float32(0)
+    x = jnp.asarray(np.asarray(data, np.float32))
+    q = jnp.asarray(np.asarray(queries, np.float32))
+    return x, q, jnp.float32(0), jnp.float32(0)
 
 
 def batch_beam_search(
@@ -196,6 +254,7 @@ def batch_beam_search(
     expand: int = 8,
     metric: str = "l2",
     n_real: int | None = None,
+    quant=None,
 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
     """Host-facing wrapper: numpy in/out, stats summed over the batch.
 
@@ -205,16 +264,19 @@ def batch_beam_search(
     """
     n_iters = default_n_iters(width) if n_iters is None else n_iters
     e = _prep_entries(entries, width)
+    x, q, scale, zp = _prep_stage(data, queries, quant)
     ids, ds, n_dist, hops = _batch_beam(
-        jnp.asarray(np.asarray(data, np.float32)),
+        x,
         jnp.asarray(np.asarray(graph), jnp.int32),
         jnp.asarray(e),
-        jnp.asarray(np.asarray(queries, np.float32)),
-        k, width, n_iters, expand, metric,
+        q,
+        k, width, n_iters, expand, metric, scale, zp,
     )
+    nd = int(np.asarray(n_dist)[:n_real].sum())
     stats = SearchStats(
-        n_distance_computations=int(np.asarray(n_dist)[:n_real].sum()),
+        n_distance_computations=nd,
         n_hops=int(np.asarray(hops)[:n_real].sum()),
+        n_quantized_distance_computations=nd if quant is not None else 0,
     )
     return np.asarray(ids, np.int64), np.asarray(ds), stats
 
@@ -227,9 +289,12 @@ def search_merged(
     width: int = 64,
     n_entries: int = 16,
     n_iters: int | None = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_merged(batch_beam_search, topo, queries, k, width=width,
-                      n_entries=n_entries, n_iters=n_iters)
+                      n_entries=n_entries, n_iters=n_iters, dtype=dtype,
+                      rerank=rerank)
 
 
 def search_split(
@@ -241,6 +306,9 @@ def search_split(
     n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
     nprobe: NprobeSpec = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(batch_beam_search, topo, queries, k, width=width,
-                     n_iters=n_iters, nprobe=nprobe, bucket=True)
+                     n_iters=n_iters, nprobe=nprobe, bucket=True,
+                     dtype=dtype, rerank=rerank)

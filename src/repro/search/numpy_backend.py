@@ -13,13 +13,14 @@ product == closer).
 
 from __future__ import annotations
 
+import functools
 import heapq
 
 import numpy as np
 
-from repro.search.types import (MergedTopology, NprobeSpec,
-                                SearchStats, ShardTopology,
-                                run_split)
+from repro.search.types import (DEFAULT_RERANK, MergedTopology, NprobeSpec,
+                                QuantSpec, SearchStats, ShardTopology,
+                                run_merged, run_split)
 
 
 def _score_rows(
@@ -33,6 +34,49 @@ def _score_rows(
     return np.einsum("nd,nd->n", d, d)
 
 
+def _make_scorer(data: np.ndarray, query: np.ndarray, metric: str, quant):
+    """``score(ids) -> [n] f32`` closure for one query over one storage.
+
+    ``quant`` selects the distance stage: ``None`` — exact f32 over
+    whatever ``data`` holds (cast per gather); ``"bf16"`` — ``data`` is a
+    bfloat16 copy, operands round to bf16 and accumulate in f32; a
+    :class:`QuantSpec` — ``data`` is uint8 codes and distances are
+    integer-accumulated in the code domain (the reference semantics the
+    kernels and batched backends are parity-tested against).
+    """
+    if isinstance(quant, QuantSpec):
+        cq = quant.quantize(query).astype(np.int64)
+        s, zp = quant.scale, quant.zero_point
+        d_real = cq.shape[0]
+        cqn = int(cq @ cq)
+        cqs = int(cq.sum())
+
+        def score(ids):
+            rows = np.asarray(data[ids], np.int64)
+            dots = rows @ cq
+            if metric == "ip":
+                return np.asarray(
+                    -(s * s * dots
+                      + s * zp * (cqs + rows.sum(axis=1))
+                      + d_real * zp * zp),
+                    np.float32,
+                )
+            rn = np.einsum("nd,nd->n", rows, rows)
+            return np.asarray(
+                (s * s) * (rn - 2 * dots + cqn), np.float32
+            )
+
+        return score
+    if quant == "bf16":
+        q = np.asarray(query, np.float32)
+        import ml_dtypes
+
+        qb = q.astype(ml_dtypes.bfloat16).astype(np.float32)
+        return lambda ids: _score_rows(data, ids, qb, metric)
+    q = np.asarray(query, np.float32)
+    return lambda ids: _score_rows(data, ids, q, metric)
+
+
 def beam_search(
     data: np.ndarray,
     graph: np.ndarray,
@@ -43,6 +87,7 @@ def beam_search(
     width: int = 64,
     max_hops: int = 10_000,
     metric: str = "l2",
+    quant=None,
 ) -> tuple[np.ndarray, SearchStats]:
     """Best-first graph search with candidate list of size ``width`` (>= k).
 
@@ -50,13 +95,15 @@ def beam_search(
     medoid) or an array of ids — CAGRA seeds its search with multiple entry
     points, which is what makes a merged *kNN* graph (local edges only,
     unlike Vamana's long-range edges) navigable;
-    ``GlobalIndex.entry_points`` provides them.
+    ``GlobalIndex.entry_points`` provides them.  ``quant`` (see
+    :func:`_make_scorer`) swaps the scoring stage; traversal order and
+    stats semantics are identical across stages.
     """
-    q = np.asarray(query, np.float32)
     stats = SearchStats()
+    score_ids = _make_scorer(data, query, metric, quant)
     entries = np.atleast_1d(np.asarray(entry, np.int64))
     visited: set[int] = set(entries.tolist())
-    d0s = _score_rows(data, entries, q, metric)
+    d0s = score_ids(entries)
     stats.n_distance_computations += len(entries)
     # candidate list: (dist, id)
     cand: list[tuple[float, int]] = list(
@@ -83,12 +130,15 @@ def beam_search(
                            np.int64)
         if fresh.size:
             visited.update(fresh.tolist())
-            ds = _score_rows(data, fresh, q, metric)
+            ds = score_ids(fresh)
             stats.n_distance_computations += int(fresh.size)
             cand.extend(zip(ds.tolist(), fresh.tolist()))
             best.extend(zip(ds.tolist(), fresh.tolist()))
     best = heapq.nsmallest(k, set(best))
     ids = np.asarray([v for _, v in best], np.int64)
+    if quant is not None:  # every score above ran in the cheap dtype
+        stats.n_quantized_distance_computations = (
+            stats.n_distance_computations)
     return ids, stats
 
 
@@ -99,18 +149,19 @@ def search_merged(
     *,
     width: int = 64,
     n_entries: int = 16,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
-    """Serve a query batch on the merged index (one CPU 'server')."""
-    index = topo.index
-    out = np.full((len(queries), k), -1, np.int64)
-    stats = SearchStats()
-    entries = index.entry_points(n_entries) if n_entries > 1 else index.medoid
-    for i, q in enumerate(np.asarray(queries, np.float32)):
-        ids, s = beam_search(topo.data, index.graph, entries, q, k,
-                             width=width, metric=topo.metric)
-        out[i, : len(ids)] = ids
-        stats += s
-    return out, stats
+    """Serve a query batch on the merged index (one CPU 'server').
+
+    The merged driver never reads the adapter's bookkeeping dists (there
+    is no pool merge), so they are switched off — the reference backend's
+    cost stays exactly the beam's own scoring."""
+    return run_merged(
+        functools.partial(_serial_batch_beam, need_dists=False),
+        topo, queries, k, width=width, n_entries=n_entries, dtype=dtype,
+        rerank=rerank,
+    )
 
 
 def _serial_batch_beam(
@@ -124,10 +175,13 @@ def _serial_batch_beam(
     n_iters: int | None = None,  # unused: the reference runs to convergence
     metric: str = "l2",
     n_real: int | None = None,
+    quant=None,
+    need_dists: bool = True,
 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
     """Batched adapter over the per-query reference :func:`beam_search`, so
-    the numpy backend shares :func:`~repro.search.types.run_split` (routing,
-    pool padding, re-rank) with the batched backends.  Shape-bucketing pad
+    the numpy backend shares the :func:`~repro.search.types.run_merged` /
+    :func:`~repro.search.types.run_split` drivers (routing, pool padding,
+    dtype staging, re-rank) with the batched backends.  Shape-bucketing pad
     rows (``n_real``) are skipped outright — a serial loop gains nothing
     from stable batch shapes."""
     qs = np.asarray(queries, np.float32)[:n_real]
@@ -136,14 +190,15 @@ def _serial_batch_beam(
     stats = SearchStats()
     for i, q in enumerate(qs):
         ids, s = beam_search(data, graph, entry, q, k, width=width,
-                             metric=metric)
+                             metric=metric, quant=quant)
         stats += s
         out[i, : len(ids)] = ids
-        if len(ids):
-            # exact scores for the re-rank; these rows were scored (and
-            # counted) in-shard already, so this is bookkeeping, not new
-            # distance work
-            dists[i, : len(ids)] = _score_rows(data, ids, q, metric)
+        if len(ids) and need_dists:
+            # stage-matched scores for the split driver's pool merge;
+            # these rows were scored (and counted) in-shard already, so
+            # this is bookkeeping, not new distance work (the merged
+            # driver ignores dists and passes need_dists=False)
+            dists[i, : len(ids)] = _make_scorer(data, q, metric, quant)(ids)
     return out, dists, stats
 
 
@@ -155,6 +210,8 @@ def search_split(
     width: int = 64,
     n_entries: int = 16,  # unused: shards seed from their centroid entry
     nprobe: NprobeSpec = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
     """Split-only query path (GGNN / Extended CAGRA, §VI): route each query
     to its ``nprobe`` nearest shards (all shards when ``nprobe=None`` or the
@@ -164,7 +221,9 @@ def search_split(
     The re-rank reuses distances already computed (and counted) inside the
     per-shard beam search, so it adds *no* distance computations — the old
     ``core.search.split_search`` double-counted them, inflating the paper's
-    Fig. 4/5 proxy for the split baselines.
+    Fig. 4/5 proxy for the split baselines.  (Staged dtypes are the
+    exception by design: their f32 epilogue recomputes the candidates
+    exactly and is counted separately as re-rank work.)
     """
     return run_split(_serial_batch_beam, topo, queries, k, width=width,
-                     nprobe=nprobe)
+                     nprobe=nprobe, dtype=dtype, rerank=rerank)

@@ -30,11 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.distance import pairwise_distance_pallas
+from repro.kernels.distance import (pairwise_distance_pallas,
+                                    pairwise_distance_u8_pallas)
 from repro.kernels.topk import merge_topk
 from repro.search.jax_backend import default_n_iters
-from repro.search.types import (MergedTopology, NprobeSpec,
-                                SearchStats, ShardTopology,
+from repro.search.types import (DEFAULT_RERANK, MergedTopology, NprobeSpec,
+                                QuantSpec, SearchStats, ShardTopology,
                                 run_merged, run_split)
 
 _LANE = 128
@@ -54,12 +55,34 @@ def _seed_distances(
     queries: jax.Array, seeds: jax.Array, metric: str, interpret: bool
 ) -> jax.Array:
     """(Q, E) distance tile via the Pallas pairwise kernel, padded to the
-    MXU block grid."""
+    MXU block grid.  f32 and bf16 panels share one kernel (it upcasts at
+    the VMEM boundary); zero-padding is exact for both metrics."""
     nq, ne = queries.shape[0], seeds.shape[0]
-    qp = _pad_to(_pad_to(queries, 1, _LANE, 0.0), 0, _LANE, 0.0)
-    sp = _pad_to(_pad_to(seeds, 1, _LANE, 0.0), 0, _LANE, 0.0)
+    qp = _pad_to(_pad_to(queries, 1, _LANE, 0), 0, _LANE, 0)
+    sp = _pad_to(_pad_to(seeds, 1, _LANE, 0), 0, _LANE, 0)
     out = pairwise_distance_pallas(
         qp, sp, metric=metric, block_m=_LANE, block_n=_LANE,
+        interpret=interpret,
+    )
+    return out[:nq, :ne]
+
+
+def _seed_distances_u8(
+    q_codes: jax.Array, seed_codes: jax.Array, spec: QuantSpec,
+    metric: str, interpret: bool,
+) -> jax.Array:
+    """(Q, E) quantized seed tile via the integer-accumulated uint8 kernel.
+    Zero-code padding cancels in L2 and adds nothing to the IP code sums;
+    the kernel's ``d_real`` keeps the affine ``D·zp²`` term honest."""
+    nq, ne = q_codes.shape[0], seed_codes.shape[0]
+    d = q_codes.shape[1]
+    qp = _pad_to(_pad_to(q_codes, 1, _LANE, 0), 0, _LANE, 0)
+    sp = _pad_to(_pad_to(seed_codes, 1, _LANE, 0), 0, _LANE, 0)
+    out = pairwise_distance_u8_pallas(
+        qp, sp,
+        jnp.full((1, 1), spec.scale, jnp.float32),
+        jnp.full((1, 1), spec.zero_point, jnp.float32),
+        metric=metric, d_real=d, block_m=_LANE, block_n=_LANE,
         interpret=interpret,
     )
     return out[:nq, :ne]
@@ -69,22 +92,25 @@ def _seed_distances(
     jax.jit, static_argnames=("k", "width", "n_iters", "metric")
 )
 def _traverse(
-    x: jax.Array,  # [N, D] f32
+    x: jax.Array,  # [N, D] storage: f32, bf16, or uint8 affine codes
     graph: jax.Array,  # [N, R] int32
     entries: jax.Array,  # [E] int32
-    queries: jax.Array,  # [Q, D] f32
+    queries: jax.Array,  # [Q, D] f32 / bf16, or [Q, D] int32 query codes
     seed_d: jax.Array,  # [Q, E] from the pallas kernel
     k: int,
     width: int,
     n_iters: int,
     metric: str,
+    scale: jax.Array,  # f32 scalar QuantSpec params (uint8 storage only)
+    zp: jax.Array,
 ):
-    n, _ = x.shape
+    n, d_real = x.shape
     r = graph.shape[1]
     nq = queries.shape[0]
     ne = entries.shape[0]
     sentinel = jnp.int32(n)
     rows_q = jnp.arange(nq)
+    is_u8 = x.dtype == jnp.uint8
 
     # candidate lists start as the seeds, bitonic-sorted ascending
     pad_v = jnp.full((nq, width), jnp.inf, jnp.float32)
@@ -104,16 +130,37 @@ def _traverse(
     done = jnp.zeros((nq,), bool)
 
     def score_tile(nbrs):
-        """(Q, R) distances, kernel formulation: dot_general + norms."""
+        """(Q, R) distances, kernel formulation: dot_general + norms.  The
+        storage dtype picks the stage — uint8 code rows accumulate in
+        int32 (the `_distance_kernel_u8` math on gathered tiles), bf16/f32
+        rows accumulate in f32."""
         rows = x[nbrs]  # [Q, R, D]
+        if is_u8:
+            ri = rows.astype(jnp.int32)
+            dots = jax.lax.dot_general(
+                queries, ri, (((1,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32,
+            )  # [Q, R]
+            if metric == "ip":
+                sq = jnp.sum(queries, axis=1, keepdims=True)
+                sx = jnp.sum(ri, axis=2)
+                return -(scale * scale * dots.astype(jnp.float32)
+                         + scale * zp * (sq + sx).astype(jnp.float32)
+                         + d_real * zp * zp)
+            qn = jnp.sum(queries * queries, axis=1, keepdims=True)
+            xn = jnp.sum(ri * ri, axis=2)
+            d_codes = (qn + xn - 2 * dots).astype(jnp.float32)
+            return jnp.maximum(d_codes, 0.0) * (scale * scale)
+        rf = rows.astype(jnp.float32)
+        qf = queries.astype(jnp.float32)
         dots = jax.lax.dot_general(
-            queries, rows, (((1,), (2,)), ((0,), (0,))),
+            qf, rf, (((1,), (2,)), ((0,), (0,))),
             preferred_element_type=jnp.float32,
         )  # [Q, R]
         if metric == "ip":
             return -dots
-        qn = jnp.sum(queries * queries, axis=1, keepdims=True)
-        xn = jnp.sum(rows * rows, axis=2)
+        qn = jnp.sum(qf * qf, axis=1, keepdims=True)
+        xn = jnp.sum(rf * rf, axis=2)
         return jnp.maximum(qn + xn - 2.0 * dots, 0.0)
 
     def cond(state):
@@ -184,23 +231,46 @@ def kernel_beam_search(
     n_iters: int | None = None,
     metric: str = "l2",
     n_real: int | None = None,
+    quant=None,
 ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
     """``n_real`` — count stats over the first ``n_real`` queries only (the
     routed split driver pads query groups to stable jit shapes by cycling
-    real rows; padded lanes must not inflate the stats)."""
+    real rows; padded lanes must not inflate the stats).  ``quant`` stages
+    the distances (None / ``"bf16"`` / :class:`QuantSpec`): seeding runs
+    through the matching Pallas distance kernel and the traversal scores
+    gathered tiles with the same math."""
     n_iters = default_n_iters(width) if n_iters is None else n_iters
     e = np.atleast_1d(np.asarray(entries, np.int64))[:width].astype(np.int32)
-    x = jnp.asarray(np.asarray(data, np.float32))
-    q = jnp.asarray(np.asarray(queries, np.float32))
     ej = jnp.asarray(e)
-    seed_d = _seed_distances(q, x[ej], metric, _interpret())
+    interp = _interpret()
+    if isinstance(quant, QuantSpec):
+        x = jnp.asarray(np.asarray(data))  # uint8 codes
+        q_codes = quant.quantize(queries)
+        seed_d = _seed_distances_u8(
+            jnp.asarray(q_codes), x[ej], quant, metric, interp
+        )
+        q = jnp.asarray(q_codes.astype(np.int32))
+        scale = jnp.float32(quant.scale)
+        zp = jnp.float32(quant.zero_point)
+    else:
+        if quant == "bf16":
+            x = jnp.asarray(data)
+            q = jnp.asarray(np.asarray(queries, np.float32)).astype(
+                jnp.bfloat16)
+        else:
+            x = jnp.asarray(np.asarray(data, np.float32))
+            q = jnp.asarray(np.asarray(queries, np.float32))
+        seed_d = _seed_distances(q, x[ej], metric, interp)
+        scale = zp = jnp.float32(0)
     ids, ds, n_dist, hops = _traverse(
         x, jnp.asarray(np.asarray(graph), jnp.int32), ej, q, seed_d,
-        k, width, n_iters, metric,
+        k, width, n_iters, metric, scale, zp,
     )
+    nd = int(np.asarray(n_dist)[:n_real].sum())
     stats = SearchStats(
-        n_distance_computations=int(np.asarray(n_dist)[:n_real].sum()),
+        n_distance_computations=nd,
         n_hops=int(np.asarray(hops)[:n_real].sum()),
+        n_quantized_distance_computations=nd if quant is not None else 0,
     )
     return np.asarray(ids, np.int64), np.asarray(ds), stats
 
@@ -213,9 +283,12 @@ def search_merged(
     width: int = 64,
     n_entries: int = 16,
     n_iters: int | None = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_merged(kernel_beam_search, topo, queries, k, width=width,
-                      n_entries=n_entries, n_iters=n_iters)
+                      n_entries=n_entries, n_iters=n_iters, dtype=dtype,
+                      rerank=rerank)
 
 
 def search_split(
@@ -227,6 +300,9 @@ def search_split(
     n_entries: int = 16,  # unused: shards seed from their centroid entry
     n_iters: int | None = None,
     nprobe: NprobeSpec = None,
+    dtype: str = "f32",
+    rerank: int = DEFAULT_RERANK,
 ) -> tuple[np.ndarray, SearchStats]:
     return run_split(kernel_beam_search, topo, queries, k, width=width,
-                     n_iters=n_iters, nprobe=nprobe, bucket=True)
+                     n_iters=n_iters, nprobe=nprobe, bucket=True,
+                     dtype=dtype, rerank=rerank)

@@ -37,16 +37,31 @@ class SearchStats:
     aggregating consumers (the ``repro.serving`` worker, benchmark loops) can
     merge per-call stats with ``+=`` and still recover per-query averages
     without threading batch sizes alongside.
+
+    ``n_distance_computations`` stays the *total* (every scored pair, any
+    precision — routing tiles included), so the trajectory in
+    BENCH_search.json keeps its meaning across PRs.  The dtype-staged path
+    (``search(..., dtype="bf16"|"uint8")``) additionally splits that total:
+    ``n_quantized_distance_computations`` are beam-traversal scores done in
+    the cheap dtype, ``n_rerank_distance_computations`` the exact f32
+    epilogue scores — the two sides of the staged memory-traffic trade.
+    Both stay 0 on the f32 path.
     """
 
     n_distance_computations: int = 0
     n_hops: int = 0
     n_queries: int = 0
+    n_quantized_distance_computations: int = 0
+    n_rerank_distance_computations: int = 0
 
     def __iadd__(self, other: "SearchStats"):
         self.n_distance_computations += other.n_distance_computations
         self.n_hops += other.n_hops
         self.n_queries += other.n_queries
+        self.n_quantized_distance_computations += (
+            other.n_quantized_distance_computations)
+        self.n_rerank_distance_computations += (
+            other.n_rerank_distance_computations)
         return self
 
     def per_query(self) -> dict:
@@ -55,7 +70,83 @@ class SearchStats:
         return {
             "distance_computations": self.n_distance_computations / q,
             "hops": self.n_hops / q,
+            "quantized_distance_computations":
+                self.n_quantized_distance_computations / q,
+            "rerank_distance_computations":
+                self.n_rerank_distance_computations / q,
         }
+
+
+SEARCH_DTYPES = ("f32", "bf16", "uint8")
+DEFAULT_RERANK = 4
+
+
+def parse_dtype(dtype: str) -> str:
+    """Validate a ``search(..., dtype=...)`` spec.
+
+    ``"f32"`` — today's full-precision path, bit-identical to not passing
+    ``dtype`` at all; ``"bf16"`` — vectors stored/streamed as bfloat16 and
+    accumulated in f32; ``"uint8"`` — affine uint8 codes with
+    integer-accumulated distances (:class:`QuantSpec`).  Both staged dtypes
+    finish with the exact-f32 re-rank epilogue.
+    """
+    if dtype not in SEARCH_DTYPES:
+        raise ValueError(
+            f"dtype must be one of {SEARCH_DTYPES}, got {dtype!r}"
+        )
+    return dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Affine uint8 quantization of one vector population.
+
+    ``value ≈ zero_point + scale · code`` with ``code ∈ [0, 255]``.
+    Derivation is one min/max data pass (:meth:`from_data`):
+    ``zero_point = min(x)`` and ``scale = (max(x) − min(x)) / 255``, i.e.
+    the code book spans exactly the population's range, so encoding the
+    population it was learned from never clips and the round-off error is
+    at most ``scale / 2`` per element.  For split topologies the spec is
+    learned *per shard* from the vectors the partitioner assigned to that
+    shard (:meth:`ShardTopology.shard_quant`): shards are spatial clusters,
+    so a per-shard range is much tighter — hence more accurate — than one
+    global range, and the exact-f32 re-rank epilogue restores cross-shard
+    comparability before pools merge.
+
+    Because query and data codes share one spec, the zero-point cancels in
+    L2 — ``‖q − x‖² ≈ scale²·‖cq − cx‖²`` — which is what makes the uint8
+    kernel a pure integer-accumulated matmul over 1-byte panels.
+    """
+
+    scale: float
+    zero_point: float
+
+    @classmethod
+    def from_data(cls, data: np.ndarray) -> "QuantSpec":
+        """Learn scale/zero-point from one pass over ``data`` (min/max)."""
+        x = np.asarray(data, np.float32)
+        if x.size == 0:
+            return cls(scale=1.0, zero_point=0.0)
+        lo = float(x.min())
+        hi = float(x.max())
+        scale = (hi - lo) / 255.0
+        return cls(scale=scale if scale > 0 else 1.0, zero_point=lo)
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """f32 → uint8 codes (values outside the learned range clip)."""
+        c = np.round((np.asarray(x, np.float32) - self.zero_point)
+                     / self.scale)
+        return np.clip(c, 0, 255).astype(np.uint8)
+
+    def dequantize(self, codes: np.ndarray) -> np.ndarray:
+        return (self.zero_point
+                + self.scale * np.asarray(codes, np.float32))
+
+
+def _to_bf16(x: np.ndarray) -> np.ndarray:
+    import ml_dtypes  # deferred: only the bf16 stage needs it
+
+    return np.asarray(x, dtype=ml_dtypes.bfloat16)
 
 
 @dataclasses.dataclass
@@ -65,6 +156,25 @@ class MergedTopology:
     data: np.ndarray  # [N, D]
     index: GlobalIndex
     metric: str = "l2"
+    # cached quantized storage views (derived, rebuilt on dataclasses.replace)
+    _quant_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
+    )
+
+    def quant_view(self, dtype: str):
+        """``(storage, QuantSpec | None)`` for a staged dtype — the uint8
+        code array (one global spec from a min/max data pass) or the bf16
+        copy.  Quantization is index-time work, cached per topology, so
+        steady-state serving pays only the cheaper memory traffic."""
+        if dtype not in self._quant_cache:
+            if dtype == "uint8":
+                spec = QuantSpec.from_data(self.data)
+                self._quant_cache[dtype] = (spec.quantize(self.data), spec)
+            elif dtype == "bf16":
+                self._quant_cache[dtype] = (_to_bf16(self.data), None)
+            else:
+                raise ValueError(f"no quantized view for dtype {dtype!r}")
+        return self._quant_cache[dtype]
 
 
 @dataclasses.dataclass
@@ -88,6 +198,36 @@ class ShardTopology:
     _entries: np.ndarray | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
+    # cached per-shard quantized storage views (derived, like _entries)
+    _quant_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
+    )
+
+    def shard_quant(self, dtype: str) -> list:
+        """Per-shard ``(storage, QuantSpec | None)`` views for a staged
+        dtype.
+
+        uint8 specs are learned *per shard* from the vectors the
+        partitioner assigned there (:class:`QuantSpec` explains why a
+        per-shard range beats a global one); bf16 needs no spec.  Cached:
+        quantization is an index-time pass, not per-query work, and does
+        not count toward ``SearchStats``.
+        """
+        if dtype not in self._quant_cache:
+            views = []
+            for ids in self.shard_ids:
+                rows = np.asarray(self.data[ids], np.float32)
+                if dtype == "uint8":
+                    spec = QuantSpec.from_data(rows)
+                    views.append((spec.quantize(rows), spec))
+                elif dtype == "bf16":
+                    views.append((_to_bf16(rows), None))
+                else:
+                    raise ValueError(
+                        f"no quantized view for dtype {dtype!r}"
+                    )
+            self._quant_cache[dtype] = views
+        return self._quant_cache[dtype]
 
     def shard_entries(self) -> np.ndarray:
         """Local entry index per shard: the vector nearest the shard's
@@ -154,20 +294,44 @@ def as_topology(index_or_shards, data=None, *, metric: str = "l2") -> Topology:
 
 
 def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
-               width: int, n_entries: int, n_iters: int | None = None):
-    """Shared merged-topology driver for the batched backends.
+               width: int, n_entries: int, n_iters: int | None = None,
+               dtype: str = "f32", rerank: int = DEFAULT_RERANK):
+    """Shared merged-topology driver for all backends.
 
-    ``beam_fn(data, graph, entries, queries, k, *, width, n_iters, metric)``
-    must return ``(ids, dists, SearchStats)``.
+    ``beam_fn(data, graph, entries, queries, k, *, width, n_iters, metric,
+    quant)`` must return ``(ids, dists, SearchStats)``.
+
+    ``dtype="f32"`` is the full-precision path, unchanged.  A staged dtype
+    swaps the beam's storage for the topology's cached quantized view, asks
+    it for the top ``min(rerank·k, width)`` candidates by quantized
+    distance, and finishes with the shared exact-f32 re-rank epilogue
+    (:func:`repro.kernels.ops.rerank_exact`) — counted separately in the
+    stats.
     """
     entries = (
         topo.index.entry_points(n_entries) if n_entries > 1
         else np.asarray([topo.index.medoid])
     )
-    ids, _, stats = beam_fn(
-        topo.data, topo.index.graph, entries, queries, k,
+    if dtype == "f32":
+        ids, _, stats = beam_fn(
+            topo.data, topo.index.graph, entries, queries, k,
+            width=width, n_iters=n_iters, metric=topo.metric,
+        )
+        return ids, stats
+    from repro.kernels import ops  # deferred: keep the f32 path jax-free
+
+    store, spec = topo.quant_view(dtype)
+    kq = min(rerank * k, width)
+    cand, _, stats = beam_fn(
+        store, topo.index.graph, entries, queries, kq,
         width=width, n_iters=n_iters, metric=topo.metric,
+        quant=spec if spec is not None else dtype,
     )
+    ids, _, n_scored = ops.rerank_exact(
+        topo.data, cand, np.asarray(queries, np.float32), k, topo.metric
+    )
+    stats.n_distance_computations += n_scored
+    stats.n_rerank_distance_computations += n_scored
     return ids, stats
 
 
@@ -268,7 +432,8 @@ def _bucket_size(m: int) -> int:
 
 def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
               width: int, n_iters: int | None = None,
-              nprobe: NprobeSpec = None, bucket: bool = False):
+              nprobe: NprobeSpec = None, bucket: bool = False,
+              dtype: str = "f32", rerank: int = DEFAULT_RERANK):
     """Shared split-topology driver: centroid-routed scatter + global re-rank.
 
     With ``nprobe`` set and centroids available, one batched query×centroid
@@ -295,6 +460,20 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     O(n_shards · log Q) distinct shapes instead of one per routing
     distribution.  ``beam_fn`` must then honor ``n_real`` so padded lanes
     never reach the stats.
+
+    A staged ``dtype`` (``"bf16"`` / ``"uint8"``) swaps each shard's
+    storage for its cached quantized view (per-shard :class:`QuantSpec`),
+    traverses on quantized distances, and widens the per-shard pools to
+    ``kq = min(rerank·k, width)`` candidates.  The pools merge on the
+    quantized scores (per-shard specs introduce only the bounded
+    quantization error, and replicated ids dedup to their closest copy as
+    before), and then *one* exact-f32 re-rank epilogue per query scores
+    the merged top ``kq`` — not ``nprobe·kq`` — candidates.  Re-ranking
+    once after the merge instead of once per shard is what keeps the f32
+    traffic a small constant per query, which the bytes-per-distance
+    acceptance claim in BENCH_search.json depends on.  The routing tile
+    stays f32 (centroids are index-time metadata, not the streamed
+    payload).
     """
     queries = np.asarray(queries, np.float32)
     nq = len(queries)
@@ -332,8 +511,13 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
         )
     n_probe = probes.shape[1]
     entries = topo.shard_entries()
-    pool_ids = np.full((nq, n_probe, k), -1, np.int64)
-    pool_d = np.full((nq, n_probe, k), np.inf, np.float32)
+    staged = dtype != "f32"
+    kq = k  # per-shard pool width (candidates per probed shard)
+    if staged:
+        shard_store = topo.shard_quant(dtype)
+        kq = min(rerank * k, width)
+    pool_ids = np.full((nq, n_probe, kq), -1, np.int64)
+    pool_d = np.full((nq, n_probe, kq), np.inf, np.float32)
     for p, s in enumerate(live):
         qrows, slots = np.nonzero(probes == p)
         m = qrows.size
@@ -345,21 +529,37 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
             if b > m:
                 use_rows = np.resize(qrows, b)  # cycle real rows as padding
         ids = topo.shard_ids[s]
+        if staged:
+            store, spec = shard_store[s]
+            quant_kw = {"quant": spec if spec is not None else dtype}
+        else:
+            store, quant_kw = np.asarray(topo.data[ids]), {}
         local, ld, s_stats = beam_fn(
-            np.asarray(topo.data[ids]), topo.shard_graphs[s],
-            int(entries[s]), queries[use_rows], min(k, len(ids)),
+            store, topo.shard_graphs[s],
+            int(entries[s]), queries[use_rows], min(kq, len(ids)),
             width=width, n_iters=n_iters, metric=topo.metric,
-            n_real=m if use_rows is not qrows else None,
+            n_real=m if use_rows is not qrows else None, **quant_kw,
         )
         stats += s_stats
-        local, ld = pad_pool(local[:m], ld[:m], k)
+        local, ld = pad_pool(local[:m], ld[:m], kq)
         gids = np.where(local >= 0, ids[np.maximum(local, 0)], -1)
         pool_ids[qrows, slots] = gids
         pool_d[qrows, slots] = np.where(local >= 0, ld, np.inf)
-    return rerank_shard_pools(
-        pool_ids.reshape(nq, n_probe * k),
-        pool_d.reshape(nq, n_probe * k), k
-    ), stats
+    merged = rerank_shard_pools(
+        pool_ids.reshape(nq, n_probe * kq),
+        pool_d.reshape(nq, n_probe * kq), kq
+    )
+    if not staged:
+        return merged, stats
+    # one exact-f32 epilogue per query over the merged quantized top-kq
+    from repro.kernels import ops  # deferred: keep the f32 path jax-free
+
+    out, _, n_scored = ops.rerank_exact(
+        topo.data, merged, queries, k, topo.metric
+    )
+    stats.n_distance_computations += n_scored
+    stats.n_rerank_distance_computations += n_scored
+    return out, stats
 
 
 def rerank_shard_pools(

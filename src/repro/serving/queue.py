@@ -48,6 +48,7 @@ class PendingRequest:
     future: asyncio.Future  # resolves to a QueryResult
     t_submit: float  # clock units (seconds); queueing latency starts here
     nprobe: Any = None  # per-request routing override (NprobeSpec)
+    dtype: str = "f32"  # per-request distance-stage override
 
 
 class MicroBatcher:

@@ -33,8 +33,8 @@ from typing import Any
 
 import numpy as np
 
-from repro.search import (SearchStats, as_topology, get_backend,
-                          parse_nprobe, search)
+from repro.search import (DEFAULT_RERANK, SearchStats, as_topology,
+                          get_backend, parse_dtype, parse_nprobe, search)
 from repro.serving.policy import AdaptiveWindow, FixedWindow, SLOPolicy
 from repro.serving.queue import (MicroBatcher, PendingRequest, RequestQueue,
                                  ServerOverloadedError)
@@ -66,7 +66,10 @@ class ServingConfig:
     """Knobs for :class:`AnnServer`.
 
     Engine side (passed straight to :func:`repro.search.search`):
-    ``k``, ``width``, ``n_entries``, ``backend``, ``nprobe``, ``metric``.
+    ``k``, ``width``, ``n_entries``, ``backend``, ``nprobe``, ``metric``,
+    ``dtype`` (distance stage: ``"f32"``/``"bf16"``/``"uint8"``) and
+    ``rerank`` (staged dtypes re-rank the top ``rerank·k`` candidates
+    exactly in f32).
 
     Batching side: a batch flushes at ``max_batch`` requests or when its
     oldest request has waited ``max_wait_ms`` — whichever trips first
@@ -87,6 +90,8 @@ class ServingConfig:
     n_entries: int = 16
     backend: str = "jax"
     nprobe: Any = None  # NprobeSpec: int, "auto", ("auto", margin), None
+    dtype: str = "f32"  # distance stage; per-request overridable
+    rerank: int = DEFAULT_RERANK  # staged dtypes re-rank rerank·k exactly
     metric: str | None = None
     max_batch: int = 64
     max_wait_ms: float = 2.0
@@ -122,9 +127,10 @@ class AnnServer:
     Accepts everything ``repro.search.search`` accepts as a target — a
     topology, a bare ``GlobalIndex`` + ``data``, or ``(ids, graphs)`` +
     ``data`` — so routed split serving and all registered backends work
-    unchanged.  ``submit`` may carry a per-request ``nprobe`` override
-    (e.g. ``"auto"``); the worker groups a flushed batch by override so
-    mixed batches still make one engine call per distinct option.
+    unchanged.  ``submit`` may carry per-request ``nprobe`` (e.g.
+    ``"auto"``) and ``dtype`` (e.g. ``"uint8"``) overrides; the worker
+    groups a flushed batch by the ``(nprobe, dtype)`` pair so mixed
+    batches still make one engine call per distinct option set.
     """
 
     def __init__(self, index_or_shards, config: ServingConfig | None = None,
@@ -138,6 +144,7 @@ class AnnServer:
             self.topology = dataclasses.replace(self.topology,
                                                 metric=cfg.metric)
         parse_nprobe(cfg.nprobe)  # fail fast on a bad default spec
+        parse_dtype(cfg.dtype)  # ...a bad distance stage
         get_backend(cfg.backend)  # ...and on an unknown backend name
         if cfg.width < cfg.k:  # ...and before search() would refuse it
             raise ValueError(
@@ -189,9 +196,13 @@ class AnnServer:
 
     def submit_nowait(self, query: np.ndarray, *,
                       nprobe: Any = USE_DEFAULT,
+                      dtype: Any = USE_DEFAULT,
                       t_submit: float | None = None) -> asyncio.Future:
         """Enqueue one query; returns the future (no await).
 
+        ``nprobe`` / ``dtype`` override the server defaults per request
+        (the worker groups a flushed batch by the pair, so mixed traffic
+        still makes one engine call per distinct option set).
         ``t_submit`` backdates the request for open-loop measurement: a
         load generator that fell behind the arrival schedule can charge
         the scheduling slip to the request's latency, as a real network
@@ -215,11 +226,14 @@ class AnnServer:
             )
         if nprobe is not USE_DEFAULT:
             parse_nprobe(nprobe)  # fail in the caller, not the worker
+        if dtype is not USE_DEFAULT:
+            parse_dtype(dtype)
         fut = asyncio.get_running_loop().create_future()
         req = PendingRequest(
             query=q, future=fut,
             t_submit=self.clock() if t_submit is None else t_submit,
             nprobe=self.config.nprobe if nprobe is USE_DEFAULT else nprobe,
+            dtype=self.config.dtype if dtype is USE_DEFAULT else dtype,
         )
         try:
             shed = self._queue.submit(req)
@@ -236,9 +250,10 @@ class AnnServer:
 
     async def submit(self, query: np.ndarray, *,
                      nprobe: Any = USE_DEFAULT,
+                     dtype: Any = USE_DEFAULT,
                      t_submit: float | None = None) -> QueryResult:
         """Submit one query and await its :class:`QueryResult`."""
-        return await self.submit_nowait(query, nprobe=nprobe,
+        return await self.submit_nowait(query, nprobe=nprobe, dtype=dtype,
                                         t_submit=t_submit)
 
     # ---- the worker -----------------------------------------------------
@@ -301,10 +316,13 @@ class AnnServer:
         stand in for queries), so jit tracing is a startup cost instead of
         a latency spike on the first unlucky request of each occupancy.
 
-        Only the *config-default* ``nprobe`` path is warmed — per-request
-        overrides (and the routed split driver's data-dependent per-shard
-        group shapes) can still trace on first use; a latency-critical
-        deployment should fix its options server-wide.  With
+        Only the *config-default* ``(nprobe, dtype)`` path is warmed —
+        per-request overrides (and the routed split driver's
+        data-dependent per-shard group shapes) can still trace on first
+        use; a latency-critical deployment should fix its options
+        server-wide.  Warming every dtype would triple the startup cost
+        for buckets mixed traffic may never hit — the trade the
+        mixed-dtype serving test pins down.  With
         ``bucket_batches=False`` occupancies are unbounded-shape anyway,
         so there is nothing useful to warm (see ``_serve_loop``)."""
         cfg = self.config
@@ -318,25 +336,27 @@ class AnnServer:
             qs = np.resize(data[: min(len(data), size)], (size, self._dim))
             search(self.topology, qs, cfg.k, backend=cfg.backend,
                    width=cfg.width, n_entries=cfg.n_entries,
-                   nprobe=cfg.nprobe)
+                   nprobe=cfg.nprobe, dtype=cfg.dtype, rerank=cfg.rerank)
 
     def _execute(self, batch: list[PendingRequest]) -> list[np.ndarray]:
-        """One flushed batch → engine calls (grouped by nprobe override).
+        """One flushed batch → engine calls, grouped by the per-request
+        ``(nprobe, dtype)`` option pair.
 
         Runs in an executor thread; touches no asyncio state.  Batches are
         bucket-padded by cycling real queries (the padded lanes recompute
         real work, so results are unaffected and stats can be rescaled).
         """
         cfg = self.config
-        # key on the *parsed* spec so equivalent forms ("auto" vs
+        # key on the *parsed* nprobe spec so equivalent forms ("auto" vs
         # ("auto", DEFAULT_AUTO_MARGIN), 2 vs np.int64(2)) share one
-        # engine call instead of splitting the batch
-        groups: dict[tuple, tuple[Any, list[int]]] = {}
+        # engine call instead of splitting the batch; dtype is already
+        # canonical after parse_dtype at submit time
+        groups: dict[tuple, tuple[Any, str, list[int]]] = {}
         for i, req in enumerate(batch):
-            key = parse_nprobe(req.nprobe)
-            groups.setdefault(key, (req.nprobe, []))[1].append(i)
+            key = (parse_nprobe(req.nprobe), req.dtype)
+            groups.setdefault(key, (req.nprobe, req.dtype, []))[2].append(i)
         out: list[tuple | None] = [None] * len(batch)
-        for nprobe, idxs in groups.values():
+        for nprobe, dtype, idxs in groups.values():
             queries = np.stack([batch[i].query for i in idxs])
             m = len(idxs)
             b = bucket_batch_size(m, cfg.max_batch) if cfg.bucket_batches \
@@ -347,6 +367,7 @@ class AnnServer:
             ids, st = search(
                 self.topology, queries, cfg.k, backend=cfg.backend,
                 width=cfg.width, n_entries=cfg.n_entries, nprobe=nprobe,
+                dtype=dtype, rerank=cfg.rerank,
             )
             self.stats.observe_batch(m, b, st, time.perf_counter() - t0)
             for j, i in enumerate(idxs):

@@ -43,6 +43,11 @@ class ServerStats:
         self.search = SearchStats()  # raw engine counters (padded lanes in)
         self.dist_comps = 0.0  # padding-scaled distance computations
         self.hops = 0.0
+        # padding-scaled split of dist_comps for the staged-dtype path:
+        # cheap-precision traversal scores vs exact-f32 re-rank scores
+        # (both 0 under dtype="f32")
+        self.quant_comps = 0.0
+        self.rerank_comps = 0.0
         self.batch_time_s = 0.0  # engine service time, sum over batches
         self._lat_cap = int(latency_cap)
         self._lat: list[float] = []  # seconds, reservoir
@@ -90,6 +95,8 @@ class ServerStats:
         scale = n_real / max(n_padded, 1)
         self.dist_comps += stats.n_distance_computations * scale
         self.hops += stats.n_hops * scale
+        self.quant_comps += stats.n_quantized_distance_computations * scale
+        self.rerank_comps += stats.n_rerank_distance_computations * scale
         self.batch_time_s += elapsed_s
 
     # ---- reading --------------------------------------------------------
@@ -143,6 +150,10 @@ class ServerStats:
             "padding_fraction": (self.n_padded_lanes / lanes) if lanes else 0.0,
             "distance_computations_per_query": self.dist_comps / served,
             "hops_per_query": self.hops / served,
+            "quantized_distance_computations_per_query":
+                self.quant_comps / served,
+            "rerank_distance_computations_per_query":
+                self.rerank_comps / served,
             "engine_time_ms_per_batch":
                 (self.batch_time_s / self.n_batches * 1e3)
                 if self.n_batches else 0.0,

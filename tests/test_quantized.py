@@ -1,0 +1,333 @@
+"""Quantized distance stages: property-based parity + staging invariants.
+
+Three layers of guarantees, mirroring the staged path itself:
+
+  * **Spec/codes** — :class:`~repro.search.QuantSpec`'s affine round-trip
+    error is bounded by ``scale/2`` per element, per-shard specs really
+    come from the shard's own min/max, and the specs the partitioner's
+    shards induce are tighter than one global range.
+  * **Distances** — for *random* inputs (hypothesis when installed, the
+    seeded-fallback draw pattern from ``tests/test_partition.py``
+    otherwise), uint8 integer-accumulated and bf16 distances match the f32
+    reference within a bound *derived* from the quantization error
+    (per-element round-off ≤ scale/2 resp. 2⁻⁸ relative), for both
+    metrics, in both the jnp reference and the Pallas kernel (interpret
+    mode).
+  * **Engine** — ``dtype="f32"`` is bit-identical to the default path on
+    all three backends (ids *and* stats), and the staged dtypes keep the
+    quantized/re-rank stat split consistent.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import IndexConfig
+from repro.core import builder
+from repro.data.synthetic import make_clustered
+from repro.kernels import ops, ref
+from repro.search import QuantSpec, parse_dtype, search
+from repro.search.types import _to_bf16
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade, don't abort collection
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def fuzz(max_examples: int, **ranges):
+    """``@fuzz(n=("int", lo, hi), eps=("float", lo, hi), ...)``.
+
+    With hypothesis: a ``@given`` property test over the ranges.  Without:
+    ``pytest.mark.parametrize`` over ``max_examples`` seeded random draws
+    from the same ranges (deterministic across runs).
+    """
+    if HAVE_HYPOTHESIS:
+        strats = {
+            name: (st.integers(lo, hi) if kind == "int"
+                   else st.floats(lo, hi))
+            for name, (kind, lo, hi) in ranges.items()
+        }
+
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**strats)(fn)
+            )
+
+        return deco
+
+    rng = np.random.default_rng(0xBEEF)
+    names = sorted(ranges)
+    cases = []
+    for _ in range(max_examples):
+        row = []
+        for name in names:
+            kind, lo, hi = ranges[name]
+            row.append(int(rng.integers(lo, hi + 1)) if kind == "int"
+                       else float(rng.uniform(lo, hi)))
+        cases.append(tuple(row))
+
+    def deco(fn):
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+    return deco
+
+
+def _draw(seed: int, m: int, n: int, d: int, spread: float):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(4, d)).astype(np.float32) * 3.0
+    q = (centers[rng.integers(0, 4, m)]
+         + spread * rng.normal(size=(m, d)).astype(np.float32))
+    x = (centers[rng.integers(0, 4, n)]
+         + spread * rng.normal(size=(n, d)).astype(np.float32))
+    return q, x
+
+
+# ---- QuantSpec -----------------------------------------------------------
+
+@fuzz(20, seed=("int", 0, 10_000), scale_pow=("float", -3.0, 3.0))
+def test_quantspec_roundtrip_error_bound(seed, scale_pow):
+    """Dequantize∘quantize moves no in-range element more than scale/2."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(50, 16)) * 10.0**scale_pow).astype(np.float32)
+    spec = QuantSpec.from_data(x)
+    err = np.abs(spec.dequantize(spec.quantize(x)) - x)
+    assert err.max() <= spec.scale / 2 + 1e-6 * spec.scale
+    # range endpoints land on code 0 / 255
+    codes = spec.quantize(x)
+    assert codes.min() == 0 and codes.max() == 255
+
+
+def test_quantspec_degenerate_data():
+    spec = QuantSpec.from_data(np.zeros((4, 8), np.float32))
+    assert spec.scale == 1.0  # guard: constant data must not divide by 0
+    assert (spec.quantize(np.zeros((2, 8))) == 0).all()
+    assert QuantSpec.from_data(np.zeros((0, 8))).scale == 1.0
+
+
+def test_quantize_clips_out_of_range():
+    spec = QuantSpec.from_data(np.asarray([[0.0], [1.0]], np.float32))
+    codes = spec.quantize(np.asarray([[-5.0], [0.5], [9.0]], np.float32))
+    assert codes[0, 0] == 0 and codes[2, 0] == 255
+
+
+# ---- distance parity under a derived bound -------------------------------
+
+@fuzz(12, seed=("int", 0, 10_000), d=("int", 4, 96),
+      spread=("float", 0.2, 2.0))
+def test_uint8_l2_within_derived_bound(seed, d, spread):
+    """|d̂ − d| ≤ 2·s·√(D·d̂) + s²·D.
+
+    Derivation: with per-element round-off ≤ s/2 on both operands,
+    ‖(q̂−x̂) − (q−x)‖ ≤ s·√D, so |√d̂ − √d| ≤ s√D and
+    |d̂ − d| ≤ s√D·(√d̂ + √d) ≤ 2·s·√(D·d̂) + s²·D.
+    """
+    q, x = _draw(seed, 8, 64, d, spread)
+    spec = QuantSpec.from_data(np.vstack([q, x]))  # in-range: no clipping
+    s = spec.scale
+    d_hat = np.asarray(ref.pairwise_distance_u8(
+        spec.quantize(q), spec.quantize(x), s, spec.zero_point, "l2"
+    ))
+    d_true = np.asarray(ref.pairwise_l2(q, x))
+    bound = 2.0 * s * np.sqrt(d * d_hat) + s * s * d + 1e-3
+    assert (np.abs(d_hat - d_true) <= bound).all()
+
+
+@fuzz(12, seed=("int", 0, 10_000), d=("int", 4, 96),
+      spread=("float", 0.2, 2.0))
+def test_uint8_ip_within_derived_bound(seed, d, spread):
+    """|q̂·x̂ − q·x| ≤ ‖eq‖·‖x‖ + ‖q̂‖·‖ex‖ with ‖e‖ ≤ (s/2)·√D."""
+    q, x = _draw(seed, 8, 64, d, spread)
+    spec = QuantSpec.from_data(np.vstack([q, x]))
+    e = spec.scale / 2 * np.sqrt(d)
+    got = np.asarray(ref.pairwise_distance_u8(
+        spec.quantize(q), spec.quantize(x), spec.scale, spec.zero_point,
+        "ip",
+    ))
+    want = np.asarray(ref.pairwise_ip(q, x))
+    qn = np.linalg.norm(spec.dequantize(spec.quantize(q)), axis=1)
+    xn = np.linalg.norm(x, axis=1)
+    bound = e * (xn[None, :] + qn[:, None]) + 1e-3
+    assert (np.abs(got - want) <= bound).all()
+
+
+@fuzz(12, seed=("int", 0, 10_000), d=("int", 4, 96),
+      spread=("float", 0.2, 2.0))
+def test_bf16_l2_within_derived_bound(seed, d, spread):
+    """bf16 rounding is ≤ 2⁻⁸ relative per element; same algebra as the
+    uint8 bound but with a per-pair error vector norm."""
+    q, x = _draw(seed, 8, 64, d, spread)
+    qb = np.asarray(_to_bf16(q), np.float32)
+    xb = np.asarray(_to_bf16(x), np.float32)
+    d_hat = np.asarray(ref.pairwise_l2(qb, xb))
+    d_true = np.asarray(ref.pairwise_l2(q, x))
+    # ‖err‖ ≤ 2⁻⁸·‖|q| + |x|‖ per pair (triangle inequality, elementwise)
+    mag = (np.abs(q)[:, None, :] + np.abs(x)[None, :, :])
+    e = 2.0**-8 * np.linalg.norm(mag, axis=2)
+    bound = 2.0 * e * np.sqrt(d_hat) + e * e + 1e-3
+    assert (np.abs(d_hat - d_true) <= bound).all()
+
+
+# ---- kernel vs reference -------------------------------------------------
+
+@pytest.fixture()
+def force_interpret():
+    ops.set_pallas_mode("force_interpret")
+    yield
+    ops.set_pallas_mode("auto")
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("shape", [(8, 16, 24), (130, 200, 130)])
+def test_u8_kernel_matches_reference(force_interpret, metric, shape):
+    """The Pallas uint8 kernel (zero-code padding, SMEM affine scalars,
+    int32 MXU accumulation) agrees with the jnp oracle off the block grid."""
+    m, n, d = shape
+    rng = np.random.default_rng(3)
+    cq = rng.integers(0, 256, size=(m, d), dtype=np.uint8)
+    cx = rng.integers(0, 256, size=(n, d), dtype=np.uint8)
+    s, zp = 0.037, -4.2
+    got = np.asarray(ops.pairwise_distance_u8(cq, cx, s, zp, metric))
+    want = np.asarray(ref.pairwise_distance_u8(cq, cx, s, zp, metric))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_bf16_kernel_matches_reference(force_interpret):
+    """The shared f32/bf16 distance kernel upcasts bf16 panels exactly."""
+    rng = np.random.default_rng(4)
+    q = _to_bf16(rng.normal(size=(70, 40)).astype(np.float32))
+    x = _to_bf16(rng.normal(size=(150, 40)).astype(np.float32))
+    got = np.asarray(ops.pairwise_distance(q, x, "l2"))
+    import jax.numpy as jnp
+
+    want = np.asarray(ref.pairwise_l2(
+        jnp.asarray(q).astype(jnp.float32), jnp.asarray(x).astype(jnp.float32)
+    ))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rerank_exact_epilogue():
+    """The shared f32 epilogue: exact distances on candidates only, (d, id)
+    tie-break, -1/inf padding, and an honest scored-count."""
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(30, 8)).astype(np.float32)
+    q = data[:2] + 0.01
+    cand = np.asarray([[3, 0, 7, -1, 0], [5, 5, 5, 5, -1]], np.int64)
+    ids, dists, n_scored = ops.rerank_exact(data, cand, q, 3)
+    assert n_scored == 8  # -1 slots are not scored
+    d0 = ((data[[0, 3, 7]] - q[0]) ** 2).sum(axis=1)
+    assert ids[0, 0] == 0 and dists[0, 0] == pytest.approx(d0.min())
+    # duplicates collapse into deterministic (distance, id) order, and the
+    # short candidate list pads with -1/inf
+    assert ids[1].tolist() == [5, 5, 5]
+    full_ids, full_d, _ = ops.rerank_exact(data, cand[:, :1], q, 3)
+    assert full_ids[0].tolist() == [3, -1, -1]
+    assert np.isinf(full_d[0, 1:]).all()
+
+
+# ---- engine-level invariants ---------------------------------------------
+
+@pytest.fixture(scope="module")
+def built():
+    ds = make_clustered(900, 24, n_queries=24, spread=1.0, seed=11)
+    cfg = IndexConfig(n_clusters=4, degree=16, build_degree=32,
+                      block_size=512)
+    b = builder.build_scalegann(ds.data, cfg, n_workers=2)
+    return ds, b
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dtype_f32_bit_identical(built, backend):
+    """dtype="f32" must be *the* historical path, not a staged cousin:
+    identical ids and identical stats on both topologies, every backend."""
+    ds, b = built
+    for topo in (b.topology(ds.data), b.shard_topology(ds.data)):
+        ids_default, st_default = search(topo, ds.queries, 10,
+                                         backend=backend, width=64)
+        ids_f32, st_f32 = search(topo, ds.queries, 10, backend=backend,
+                                 width=64, dtype="f32")
+        np.testing.assert_array_equal(ids_default, ids_f32)
+        assert st_default == st_f32
+        assert st_f32.n_quantized_distance_computations == 0
+        assert st_f32.n_rerank_distance_computations == 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dtype", ["bf16", "uint8"])
+def test_staged_stats_split_is_consistent(built, backend, dtype):
+    """total = quantized + re-rank (+ the f32 routing tile when routed),
+    and the re-rank stage scores at most rerank·k per query — the merged
+    pool is re-ranked once, not once per probed shard."""
+    ds, b = built
+    topo = b.shard_topology(ds.data)
+    n_shards = len(topo.shard_ids)
+    ids, st = search(topo, ds.queries, 10, backend=backend, width=64,
+                     dtype=dtype, nprobe=2, rerank=3)
+    route_tile = len(ds.queries) * n_shards
+    assert (st.n_distance_computations
+            == st.n_quantized_distance_computations
+            + st.n_rerank_distance_computations + route_tile)
+    assert 0 < st.n_rerank_distance_computations <= len(ds.queries) * 30
+    per_q = st.per_query()
+    assert per_q["rerank_distance_computations"] <= 30
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "uint8"])
+def test_staged_recall_parity_across_backends(built, dtype):
+    """jax/pallas staged traversal within 2 recall points of the numpy
+    staged reference (same contract as the f32 parity tests)."""
+    from repro.data.synthetic import recall_at
+
+    ds, b = built
+    topo = b.topology(ds.data)
+    recalls = {}
+    for backend in BACKENDS:
+        ids, _ = search(topo, ds.queries, 10, backend=backend, width=64,
+                        dtype=dtype)
+        recalls[backend] = recall_at(ids, ds.gt, 10)
+    for backend in BACKENDS[1:]:
+        assert recalls[backend] >= recalls["numpy"] - 0.02, recalls
+
+
+def test_shard_quant_specs_are_per_shard(built):
+    """Specs come from each shard's own min/max (the partitioner's data
+    pass), and shard-local ranges are no wider than the global range."""
+    ds, b = built
+    topo = b.shard_topology(ds.data)
+    views = topo.shard_quant("uint8")
+    assert len(views) == len(topo.shard_ids)
+    g = QuantSpec.from_data(ds.data)
+    for ids, (codes, spec) in zip(topo.shard_ids, views):
+        rows = ds.data[ids].astype(np.float32)
+        assert spec.zero_point == pytest.approx(rows.min())
+        assert spec.scale == pytest.approx((rows.max() - rows.min()) / 255)
+        assert spec.scale <= g.scale + 1e-9
+        assert codes.dtype == np.uint8 and codes.shape == rows.shape
+    # cached: second call returns the same objects
+    assert topo.shard_quant("uint8") is views
+
+
+def test_uint8_native_data_quantizes_losslessly_enough():
+    """BIGANN-style uint8-valued vectors: the learned spec's round-trip
+    error stays sub-integer, so integer-valued data reorders nothing."""
+    ds = make_clustered(400, 16, n_queries=8, dtype="uint8", seed=3)
+    assert ds.data.dtype == np.uint8
+    spec = QuantSpec.from_data(ds.data)
+    err = np.abs(spec.dequantize(spec.quantize(ds.data.astype(np.float32)))
+                 - ds.data.astype(np.float32))
+    assert err.max() < 0.5
+
+
+def test_parse_dtype_and_rerank_validation(built):
+    ds, b = built
+    assert parse_dtype("bf16") == "bf16"
+    with pytest.raises(ValueError, match="dtype"):
+        search(b.topology(ds.data), ds.queries[:1], 10, dtype="fp8")
+    with pytest.raises(ValueError, match="rerank"):
+        search(b.topology(ds.data), ds.queries[:1], 10, rerank=0)
+    with pytest.raises(ValueError, match="rerank"):
+        search(b.topology(ds.data), ds.queries[:1], 10, rerank=1.5)

@@ -232,6 +232,39 @@ def test_auto_nprobe_beats_fixed_at_same_budget(routed_topo, routed_queries,
             < 0.5 * st_full.n_distance_computations)
 
 
+@pytest.mark.parametrize("dtype", ("bf16", "uint8"))
+def test_quantized_recall_within_001_on_2k_fixture(merged, routed_queries,
+                                                   dtype):
+    """The staged-dtype acceptance bar: quantized traversal + f32 re-rank
+    must hold recall@10 within 0.01 of the f32 path on the 2k fixture
+    (256 held-out queries, jax serving backend)."""
+    qs = routed_queries.queries
+    topo = MergedTopology(data=routed_queries.data, index=merged.index)
+    ids_f, _ = search(topo, qs, 10, backend="jax", width=64)
+    ids_q, st = search(topo, qs, 10, backend="jax", width=64, dtype=dtype)
+    r_f = recall_at(ids_f, routed_queries.gt, 10)
+    r_q = recall_at(ids_q, routed_queries.gt, 10)
+    assert r_q >= r_f - 0.01, f"{dtype}: {r_q:.3f} vs f32 {r_f:.3f}"
+    assert st.n_quantized_distance_computations > 0
+    assert st.n_rerank_distance_computations > 0
+
+
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+@pytest.mark.parametrize("dtype", ("bf16", "uint8"))
+def test_quantized_recall_within_001_routed(routed_topo, routed_queries,
+                                            backend, dtype):
+    """Same bar on the centroid-routed nprobe=2 path: per-shard QuantSpecs
+    + the exact pool merge must not cost more than 0.01 recall@10."""
+    qs = routed_queries.queries
+    ids_f, _ = search(routed_topo, qs, 10, backend=backend, width=64,
+                      nprobe=2)
+    ids_q, _ = search(routed_topo, qs, 10, backend=backend, width=64,
+                      nprobe=2, dtype=dtype)
+    r_f = recall_at(ids_f, routed_queries.gt, 10)
+    r_q = recall_at(ids_q, routed_queries.gt, 10)
+    assert r_q >= r_f - 0.01, f"{dtype}: {r_q:.3f} vs f32 {r_f:.3f}"
+
+
 def test_parse_nprobe_specs(ds, routed_topo):
     from repro.search import parse_nprobe
 

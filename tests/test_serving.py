@@ -354,6 +354,89 @@ def test_equivalent_nprobe_specs_share_one_engine_call(ring):
     asyncio.run(main())
 
 
+def test_mixed_dtype_batches_group_without_cross_contamination(
+        ring, monkeypatch):
+    """One flush of mixed per-request ``(nprobe, dtype)`` traffic must make
+    exactly one engine call per distinct option pair (no splitting of
+    equivalent specs, no merging of different ones), route every result to
+    its *own* future, and keep jit pre-tracing to the config-default path
+    — extra dtypes must not add startup trace buckets.
+
+    Runs on a fake clock: submit stamps are explicit and the server's
+    clock is advanced by hand, so the recorded latencies are exact
+    arithmetic, not wall-time."""
+    data, topo = ring
+    calls = []
+    import repro.serving.server as srv_mod
+
+    real_search = srv_mod.search
+
+    def recording_search(t, queries, k, **kw):
+        calls.append((len(queries), kw.get("nprobe"), kw.get("dtype")))
+        return real_search(t, queries, k, **kw)
+
+    monkeypatch.setattr(srv_mod, "search", recording_search)
+    now = {"t": 0.0}
+
+    async def main():
+        sc = ServingConfig(backend="numpy", k=3, width=16, max_batch=8,
+                           max_wait_ms=50.0, pretrace=True)
+        async with AnnServer(topo, config=sc,
+                             clock=lambda: now["t"]) as srv:
+            combos = [(None, "f32"), (None, "uint8"), (None, "bf16"),
+                      (1, "uint8")]
+            futs = []
+            for i in range(8):  # fills max_batch: one size-flush
+                nprobe, dtype = combos[i % 4]
+                futs.append(srv.submit_nowait(
+                    data[i], nprobe=nprobe, dtype=dtype,
+                    t_submit=i * 0.001))
+            now["t"] = 1.0  # completions are stamped by the fake clock
+            outs = await asyncio.gather(*futs)
+        # --- no cross-contamination: each future got its own query's NN
+        assert [int(o.ids[0]) for o in outs] == list(range(8))
+        # each engine call saw only its group's 2 requests
+        assert [o.batch_size for o in outs] == [2] * 8
+        # fake-clock latency: exactly (1.0 - submit stamp)
+        for i, o in enumerate(outs):
+            assert o.latency_s == pytest.approx(1.0 - i * 0.001)
+        # --- pre-trace warmed only the default (nprobe, dtype) path, one
+        # call per power-of-two bucket (no extra buckets for overrides)
+        pre = calls[: len(calls) - 4]
+        assert sorted(size for size, _, _ in pre) == [1, 2, 4, 8]
+        assert all(np is None and dt == "f32" for _, np, dt in pre)
+        # --- the flush split into exactly one call per distinct pair
+        flush = calls[-4:]
+        assert sorted((str(np), dt) for _, np, dt in flush) == [
+            ("1", "uint8"), ("None", "bf16"), ("None", "f32"),
+            ("None", "uint8"),
+        ]
+        assert all(size == 2 for size, _, _ in flush)
+        assert srv.stats.n_batches == 4
+        snap = srv.stats.snapshot()
+        # engine telemetry splits quantized vs re-rank work (f32-only
+        # traffic would report 0 for both)
+        assert snap["quantized_distance_computations_per_query"] > 0
+        assert snap["rerank_distance_computations_per_query"] > 0
+
+    asyncio.run(main())
+
+
+def test_per_request_dtype_validation(ring):
+    data, topo = ring
+
+    async def main():
+        async with AnnServer(topo, config=ServingConfig(
+                backend="numpy", k=3, width=16)) as srv:
+            with pytest.raises(ValueError, match="dtype"):
+                srv.submit_nowait(data[0], dtype="fp4")
+
+    asyncio.run(main())
+    with pytest.raises(ValueError, match="dtype"):
+        AnnServer(topo, config=ServingConfig(backend="numpy",
+                                             dtype="int4"))
+
+
 def test_cancellation_fails_inflight_batch(ring):
     """A worker cancelled mid-engine-call must fail the popped batch's
     futures (fail_all can't see them — they left the queue already)."""
