@@ -97,6 +97,96 @@ def _detour_counts(vs: jax.Array, nbr_vecs: jax.Array, nbr_dists: jax.Array,
     return jnp.sum(detour, axis=1) + jnp.where(valid, 0, 10**6), d_ij.shape[0] * L * L
 
 
+def _fill_reverse_loop(
+    src_s: np.ndarray, starts: np.ndarray, ends: np.ndarray, n: int, half: int
+) -> np.ndarray:
+    """Seed-loop reference for the reverse-edge fill (one python iteration
+    per node) — kept for the bit-identity parity tests and the
+    ``bench_build.py`` seed-loop baseline."""
+    rev = np.full((n, half), -1, np.int32)
+    for v in range(n):
+        cnt = min(ends[v] - starts[v], half)
+        if cnt > 0:
+            rev[v, :cnt] = src_s[starts[v] : starts[v] + cnt]
+    return rev
+
+
+def _fill_reverse(
+    src_s: np.ndarray, starts: np.ndarray, ends: np.ndarray, n: int, half: int
+) -> np.ndarray:
+    """Vectorized reverse-edge fill over the searchsorted segment layout:
+    one fancy-indexed gather instead of an O(N) python loop.  Sources are
+    sorted by destination with a *stable* sort, so each destination's first
+    ``half`` sources — and their order — match the loop reference exactly."""
+    rev = np.full((n, half), -1, np.int32)
+    if half == 0 or src_s.size == 0:
+        return rev
+    cnt = np.minimum(ends - starts, half)  # [n]
+    cols = np.arange(half)
+    take = np.minimum(starts[:, None] + cols[None, :], src_s.size - 1)
+    vals = src_s[take]
+    return np.where(cols[None, :] < cnt[:, None], vals, -1).astype(np.int32)
+
+
+def _dedup_refill_loop(
+    graph: np.ndarray, leftover: np.ndarray, R: int
+) -> np.ndarray:
+    """Seed-loop reference for the per-row dedup + leftover refill (python
+    sets, one iteration per node) — the semantics the sort-based version is
+    parity-tested against, bit for bit."""
+    out_rows = graph.copy()
+    for i in range(len(graph)):
+        seen, out = set(), []
+        for v in graph[i]:
+            if v >= 0 and v != i and v not in seen:
+                seen.add(v)
+                out.append(v)
+        if len(out) < R:
+            for v in leftover[i]:
+                if len(out) >= R:
+                    break
+                if v >= 0 and v != i and v not in seen:
+                    seen.add(v)
+                    out.append(v)
+        out_rows[i] = out + [-1] * (R - len(out))
+    return out_rows
+
+
+def _dedup_refill_rows(
+    graph: np.ndarray, leftover: np.ndarray, R: int
+) -> np.ndarray:
+    """Sort-based row dedup + refill, bit-identical to the loop reference.
+
+    The double-``lexsort`` idiom the split re-rank uses
+    (:func:`repro.search.types.rerank_shard_pools`): sort each row's
+    ``graph ∪ leftover`` entries by (id, first-seen position) to collapse
+    duplicates to their first occurrence, then restore first-seen order
+    with a stable position sort and truncate to ``R`` — exactly the loop's
+    "append first-seen valid ids, stop at R" semantics, tie-breaks
+    included (first-seen position is the only tie-break either version
+    uses)."""
+    n = len(graph)
+    ext = np.concatenate([graph, leftover], axis=1).astype(np.int64)
+    if ext.shape[1] < R:  # degenerate L < R/2 configs: pad so the cap fits
+        ext = np.pad(ext, ((0, 0), (0, R - ext.shape[1])),
+                     constant_values=-1)
+    c = ext.shape[1]
+    big = np.iinfo(np.int64).max
+    rows = np.arange(n)[:, None]
+    key = np.where((ext < 0) | (ext == rows), big, ext)
+    pos = np.broadcast_to(np.arange(c), (n, c))
+    order = np.lexsort((pos, key), axis=1)  # by id, then first-seen pos
+    sid = np.take_along_axis(key, order, axis=1)
+    spos = np.take_along_axis(pos, order, axis=1)
+    dup = np.zeros_like(sid, bool)
+    dup[:, 1:] = sid[:, 1:] == sid[:, :-1]
+    keep = (sid != big) & ~dup
+    # restore first-seen order; dropped entries sort last
+    back = np.argsort(np.where(keep, spos, c), axis=1, kind="stable")[:, :R]
+    out = np.take_along_axis(np.where(keep, sid, -1), back, axis=1)
+    return out.astype(graph.dtype)
+
+
 def optimize_graph(
     vectors: np.ndarray,
     nbrs: np.ndarray,
@@ -105,9 +195,16 @@ def optimize_graph(
     *,
     metric: str = "l2",
     node_block: int = 2048,
+    reference: bool = False,
 ) -> tuple[np.ndarray, int]:
     """Prune the degree-L kNN graph to degree R: keep the R/2 forward edges
-    with the fewest detours, then fill with reverse edges (CAGRA §4.2)."""
+    with the fewest detours, then fill with reverse edges (CAGRA §4.2).
+
+    ``reference=True`` runs the original per-node python loops for the
+    reverse-edge fill and the row dedup/refill instead of the vectorized
+    segment-scatter / sort-dedup paths — same output bit for bit
+    (parity-tested), kept as the ``bench_build.py`` seed-loop baseline.
+    """
     n, L = nbrs.shape
     x = vectors.astype(np.float32)
     fwd_keep = R - R // 2
@@ -133,47 +230,33 @@ def optimize_graph(
     dst = fwd.reshape(-1)
     ok = dst >= 0
     src, dst = src[ok], dst[ok]
-    rev = np.full((n, R // 2), -1, np.int32)
-    rev_fill = np.zeros(n, np.int32)
     order2 = np.argsort(dst, kind="stable")
     dst_s, src_s = dst[order2], src[order2]
     starts = np.searchsorted(dst_s, np.arange(n), side="left")
     ends = np.searchsorted(dst_s, np.arange(n), side="right")
-    for v in range(n):
-        cnt = min(ends[v] - starts[v], R // 2)
-        if cnt > 0:
-            rev[v, :cnt] = src_s[starts[v] : starts[v] + cnt]
-            rev_fill[v] = cnt
+    fill_rev = _fill_reverse_loop if reference else _fill_reverse
+    rev = fill_rev(src_s, starts, ends, n, R // 2)
 
     graph = np.concatenate([fwd, rev], axis=1)  # [n, R]
     # dedup per row (forward ∪ reverse may overlap); refill from leftover kNN
     leftover = np.take_along_axis(nbrs, order[:, fwd_keep:], axis=1)
-    for i in range(n):
-        row = graph[i]
-        seen, out = set(), []
-        for v in row:
-            if v >= 0 and v != i and v not in seen:
-                seen.add(v)
-                out.append(v)
-        if len(out) < R:
-            for v in leftover[i]:
-                if len(out) >= R:
-                    break
-                if v >= 0 and v != i and v not in seen:
-                    seen.add(v)
-                    out.append(v)
-        graph[i] = out + [-1] * (R - len(out))
+    dedup = _dedup_refill_loop if reference else _dedup_refill_rows
+    graph = dedup(graph, leftover, R)
     return graph.astype(np.int32), n_dist
 
 
 def build_shard_index(
-    vectors: np.ndarray, cfg: IndexConfig
+    vectors: np.ndarray, cfg: IndexConfig, *, reference: bool = False
 ) -> ShardIndex:
-    """Full CAGRA-style build of one shard (the spot-instance task body)."""
+    """Full CAGRA-style build of one shard (the spot-instance task body).
+
+    ``reference=True`` routes :func:`optimize_graph` through its original
+    per-node python loops (bit-identical output; the seed-loop baseline)."""
     nbrs, dists, nd1 = build_knn_graph(
         vectors, cfg.build_degree, metric=cfg.metric
     )
     graph, nd2 = optimize_graph(
-        vectors, nbrs, dists, cfg.degree, metric=cfg.metric
+        vectors, nbrs, dists, cfg.degree, metric=cfg.metric,
+        reference=reference,
     )
     return ShardIndex(graph=graph, n_distance_computations=nd1 + nd2)

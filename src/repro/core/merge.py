@@ -91,28 +91,99 @@ def _translate(graph: np.ndarray, ids: np.ndarray) -> np.ndarray:
     return out
 
 
-def merge_shard_indexes(
+def _edge_list(
+    shards: list[Shard], indexes: list[ShardIndex]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flatten every shard graph into one global ``(gid, neighbor)`` edge
+    list, in shard → row → slot order (the order the sequential scatter
+    appended edges in, which is what "first seen" means downstream).
+    Self-loops and -1 pads are dropped."""
+    gid_parts, nbr_parts = [], []
+    for shard, idx in zip(shards, indexes):
+        g = _translate(idx.graph, shard.ids)  # [n, R] global
+        gid_parts.append(
+            np.repeat(shard.ids.astype(np.int64), g.shape[1])
+        )
+        nbr_parts.append(g.reshape(-1))
+    gids = np.concatenate(gid_parts) if gid_parts else np.empty(0, np.int64)
+    nbrs = np.concatenate(nbr_parts) if nbr_parts else np.empty(0, np.int64)
+    ok = (nbrs >= 0) & (nbrs != gids)
+    return gids[ok], nbrs[ok]
+
+
+def _segment_distances(
+    data: np.ndarray, gids: np.ndarray, nbrs: np.ndarray,
+    block: int = 1 << 18,
+) -> np.ndarray:
+    """Squared L2 between each edge's endpoints, blocked so the gather never
+    materializes more than ``2 · block · D`` f32 elements (``data`` may be a
+    memmap at the 10^5+ scale)."""
+    d = np.empty(len(gids), np.float32)
+    for s in range(0, len(gids), block):
+        sl = slice(s, s + block)
+        diff = (np.asarray(data[nbrs[sl]], np.float32)
+                - np.asarray(data[gids[sl]], np.float32))
+        d[sl] = np.einsum("ed,ed->e", diff, diff)
+    return d
+
+
+def _union_dedup_cap(
     shards: list[Shard],
     indexes: list[ShardIndex],
     n_total: int,
     degree: int,
-    *,
-    data: np.ndarray | None = None,
-    centroid_of: np.ndarray | None = None,
-) -> GlobalIndex:
-    """Edge-union merge with degree cap.
+    data: np.ndarray | None,
+) -> np.ndarray:
+    """Vectorized edge-union: one global ``(gid, neighbor)`` sort with
+    segment-wise dedup and degree cap — replaces the per-gid python loop
+    (passes 2–3 of the sequential merge).
 
-    For each global vector, collect the union of its neighbor lists over all
-    shards containing it.  Cap at ``degree``: if ``data`` is given, keep the
-    *closest* neighbors (distance-ordered, DiskANN behavior); otherwise keep
-    shard order (replicas append after originals).
-
-    ``centroid_of`` ([N] shard id of the original assignment) is only used
-    for the medoid choice; the medoid is the vector closest to the global
-    mean when ``data`` is given, else vector 0.
+    Per-gid semantics match the loop version: duplicate ``(gid, neighbor)``
+    pairs collapse to their first appearance; the cap keeps the ``degree``
+    closest neighbors when ``data`` is given (ties broken by first-seen
+    order, the loop's stable ``argsort`` behavior) and the first-seen
+    ``degree`` otherwise.  The output is a pure function of the edge *set*,
+    so the permutation-invariance contract (§V-C) is preserved — only the
+    within-row order of an under-capacity ``data`` row differs from the
+    loop (distance-sorted instead of first-seen; same id set).
     """
-    if len(shards) != len(indexes):
-        raise ValueError("shards and indexes must align")
+    graph = np.full((n_total, degree), -1, np.int32)
+    gids, nbrs = _edge_list(shards, indexes)
+    if gids.size == 0:
+        return graph
+    # dedup: stable (gid, nbr) sort keeps the earliest appended copy first
+    order = np.lexsort((nbrs, gids))
+    sg, sn = gids[order], nbrs[order]
+    first = np.ones(len(sg), bool)
+    first[1:] = (sg[1:] != sg[:-1]) | (sn[1:] != sn[:-1])
+    ug, un, upos = sg[first], sn[first], order[first]
+    # cap: order each gid's unique neighbors by (distance, first-seen) or
+    # (first-seen) alone, then keep ranks < degree
+    if data is not None:
+        d = _segment_distances(data, ug, un)
+        sel = np.lexsort((upos, d, ug))
+    else:
+        sel = np.lexsort((upos, ug))
+    g2, n2 = ug[sel], un[sel]
+    idx = np.arange(len(sel))
+    seg_start = np.ones(len(sel), bool)
+    seg_start[1:] = g2[1:] != g2[:-1]
+    rank = idx - np.maximum.accumulate(np.where(seg_start, idx, 0))
+    keep = rank < degree
+    graph[g2[keep], rank[keep]] = n2[keep].astype(np.int32)
+    return graph
+
+
+def _union_dedup_cap_loop(
+    shards: list[Shard],
+    indexes: list[ShardIndex],
+    n_total: int,
+    degree: int,
+    data: np.ndarray | None,
+) -> np.ndarray:
+    """Seed-loop reference for passes 2–3 (presized union buffers + one
+    python iteration per global id) — kept for the merge parity tests and
+    the ``bench_build.py`` seed-loop baseline."""
     # Pass 1: count edges per global id to presize the union buffers.
     counts = np.zeros(n_total, np.int64)
     for shard, idx in zip(shards, indexes):
@@ -153,16 +224,45 @@ def merge_shard_indexes(
             else:
                 uniq = uniq[:degree]
         graph[gid, : uniq.size] = uniq
+    return graph
+
+
+def merge_shard_indexes(
+    shards: list[Shard],
+    indexes: list[ShardIndex],
+    n_total: int,
+    degree: int,
+    *,
+    data: np.ndarray | None = None,
+    centroid_of: np.ndarray | None = None,
+    reference: bool = False,
+) -> GlobalIndex:
+    """Edge-union merge with degree cap.
+
+    For each global vector, collect the union of its neighbor lists over all
+    shards containing it.  Cap at ``degree``: if ``data`` is given, keep the
+    *closest* neighbors (distance-ordered, DiskANN behavior); otherwise keep
+    shard order (replicas append after originals).
+
+    ``centroid_of`` ([N] shard id of the original assignment) is only used
+    for the medoid choice; the medoid is the vector closest to the global
+    mean when ``data`` is given, else vector 0.
+
+    ``reference=True`` runs the original per-gid python loop (passes 2–3)
+    instead of the vectorized global segment sort — the seed-loop baseline
+    ``bench_build.py`` compares against.
+    """
+    if len(shards) != len(indexes):
+        raise ValueError("shards and indexes must align")
+    union = _union_dedup_cap_loop if reference else _union_dedup_cap
+    graph = union(shards, indexes, n_total, degree, data)
 
     medoid = 0
     if data is not None:
-        sample = np.asarray(
-            data[np.linspace(0, n_total - 1, min(n_total, 8192)).astype(int)],
-            np.float32,
-        )
-        mean = sample.mean(axis=0)
+        # one stratified gather serves both the mean and the medoid probe
         probe_ids = np.linspace(0, n_total - 1, min(n_total, 8192)).astype(int)
         probe = np.asarray(data[probe_ids], np.float32)
+        mean = probe.mean(axis=0)
         medoid = int(probe_ids[((probe - mean) ** 2).sum(axis=1).argmin()])
     return GlobalIndex(graph=graph, medoid=medoid, n_vectors=n_total)
 

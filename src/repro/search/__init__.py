@@ -17,7 +17,8 @@ Replaces the four divergent implementations that used to live in
 """
 
 from repro.search.api import (SearchBackend, available_backends,  # noqa: F401
-                              get_backend, register_backend, search)
+                              beam_pool, get_backend, register_backend,
+                              search)
 from repro.search.numpy_backend import beam_search  # noqa: F401
 from repro.search.types import (DEFAULT_AUTO_MARGIN,  # noqa: F401
                                 DEFAULT_RERANK, SEARCH_DTYPES,
@@ -27,6 +28,7 @@ from repro.search.types import (DEFAULT_AUTO_MARGIN,  # noqa: F401
 
 __all__ = [
     "search",
+    "beam_pool",
     "SearchBackend",
     "register_backend",
     "get_backend",

@@ -79,6 +79,64 @@ def get_backend(name: str) -> SearchBackend:
     return entry
 
 
+def beam_pool(
+    data: np.ndarray,
+    graph: np.ndarray,
+    entries,
+    queries: np.ndarray,
+    pool: int,
+    *,
+    backend: str = "jax",
+    n_iters: int | None = None,
+    metric: str = "l2",
+    n_real: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Build-time search primitive: the engine's raw batched beam, returning
+    the *whole* candidate pool per query — ``(ids [Q, pool] int64 with -1
+    padding, dists [Q, pool] f32, SearchStats)``.
+
+    Index construction (batched Vamana insertion, NN-descent-style rounds)
+    needs the visited pool *and its distances*, not just a top-k — that is
+    exactly the beam's final candidate list, so this runs the backend's
+    beam with ``k == width == pool`` and skips the topology/re-rank layers
+    of :func:`search`.  Distances are true metric values (squared L2 /
+    negated inner product), directly comparable with freshly computed
+    ones — what ``RobustPrune``'s α-domination test consumes.
+
+    Every backend exposes the same hook (``beam_fn``); ``"jax"`` is the
+    throughput path the batched builders default to, ``"numpy"`` the exact
+    reference fallback.  Stats carry the engine's usual meaning (seed +
+    fresh-neighbor scores, expanded-node hops).  ``n_real`` limits the
+    stats to the first ``n_real`` queries — build rounds pad their last
+    batch to a stable jit shape by cycling real points, and the padded
+    lanes must not inflate the build's distance accounting (same
+    convention as the routed split driver).  With ``n_real`` set, the
+    returned arrays are ``[n_real, pool]`` on every backend (the padded
+    lanes carry no information — they repeat real queries — and the
+    backends disagree on whether to materialize them, so this function
+    slices them off uniformly).
+    """
+    impl = get_backend(backend)
+    beam = getattr(impl, "beam_fn", None)
+    if beam is None:
+        raise ValueError(
+            f"backend {backend!r} does not expose a raw beam (beam_fn) "
+            "for build-time searches"
+        )
+    pool = int(pool)
+    if pool < 1:
+        raise ValueError(f"pool must be >= 1, got {pool}")
+    queries = np.asarray(queries, np.float32)
+    ids, dists, stats = beam(
+        data, graph, entries, queries, pool, width=pool, n_iters=n_iters,
+        metric=metric, n_real=n_real,
+    )
+    if n_real is not None:
+        ids, dists = ids[:n_real], dists[:n_real]
+    stats.n_queries = len(queries) if n_real is None else n_real
+    return np.asarray(ids, np.int64), np.asarray(dists, np.float32), stats
+
+
 def search(
     index_or_shards,
     queries: np.ndarray,

@@ -281,6 +281,10 @@ def batch_beam_search(
     return np.asarray(ids, np.int64), np.asarray(ds), stats
 
 
+# raw batched-beam hook for build-time searches (`repro.search.beam_pool`)
+beam_fn = batch_beam_search
+
+
 def search_merged(
     topo: MergedTopology,
     queries: np.ndarray,

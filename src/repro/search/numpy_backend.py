@@ -202,6 +202,10 @@ def _serial_batch_beam(
     return out, dists, stats
 
 
+# raw batched-beam hook for build-time searches (`repro.search.beam_pool`)
+beam_fn = _serial_batch_beam
+
+
 def search_split(
     topo: ShardTopology,
     queries: np.ndarray,

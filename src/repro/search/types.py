@@ -202,6 +202,10 @@ class ShardTopology:
     _quant_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False
     )
+    # cached quantized routing centroids (derived, like _entries)
+    _centroid_quant: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     def shard_quant(self, dtype: str) -> list:
         """Per-shard ``(storage, QuantSpec | None)`` views for a staged
@@ -228,6 +232,44 @@ class ShardTopology:
                     )
             self._quant_cache[dtype] = views
         return self._quant_cache[dtype]
+
+    def centroid_quant(self) -> tuple:
+        """``(codes [S, D] uint8, spec, resid [S, D] f32)`` for the routing
+        centroids — one affine spec over the centroid set, derived once and
+        cached; ``resid`` is the exact per-element magnitude of the
+        centroid rounding error, ``|c − dequantize(codes)|`` — index-time
+        knowledge the tile's certified error bounds use (the query-side
+        residual is computed per call; see
+        :func:`_query_centroid_distances_u8`).
+
+        The centroids themselves are tiny index-time metadata, but the
+        query×centroid routing *tile* is per-query work (``Q·S`` scored
+        pairs on every routed call), so the uint8 distance stage scores it
+        on codes too: queries quantize with the same spec, the zero-point
+        cancels in L2, and the tile runs through the integer-accumulated
+        uint8 kernel.  One spec spans all centroids (unlike the per-shard
+        data specs) because the tile compares distances *across* shards —
+        per-centroid specs would break that comparability.
+
+        The spec's range is learned from the topology's *data*, not the
+        centroids: the tile's other operand is the query, and centroids —
+        being means — span a much narrower range than the queries the tile
+        will score, so a centroid-range spec clips nearly every query and
+        forces the certified-exact fallback (see
+        :func:`_query_centroid_distances_u8`) to eat the whole tile.  The
+        data range is the index-time proxy for the query distribution, the
+        same choice :meth:`MergedTopology.quant_view` makes for its global
+        spec.
+        """
+        if self.centroids is None:
+            raise ValueError("topology has no routing centroids")
+        if self._centroid_quant is None:
+            spec = QuantSpec.from_data(self.data)
+            cent = np.asarray(self.centroids, np.float32)
+            codes = spec.quantize(cent)
+            resid = np.abs(cent - spec.dequantize(codes)).astype(np.float32)
+            self._centroid_quant = (codes, spec, resid)
+        return self._centroid_quant
 
     def shard_entries(self) -> np.ndarray:
         """Local entry index per shard: the vector nearest the shard's
@@ -352,6 +394,120 @@ def _query_centroid_distances(
     return np.asarray(d)
 
 
+def _query_centroid_distances_u8(
+    queries: np.ndarray, codes: np.ndarray, spec: QuantSpec,
+    resid: np.ndarray, metric: str
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The routing tile on uint8 codes (the PR-4 staged-dtype follow-on):
+    queries quantize with the shared centroid spec and the [Q, S] tile runs
+    through the integer-accumulated uint8 kernel — 1 byte per streamed
+    element instead of 4 on the per-query routing work.
+
+    Returns ``(tile [Q, S] f32, err [Q, S] f32, clipped [Q] bool)``.
+    ``err`` is a *certified* per-pair bound on ``|quantized − true|``
+    (valid whenever the query did not clip; ``clipped`` flags the rows
+    where it is not).  The bound exploits that both rounding residual
+    magnitudes are exactly known — ``e^q = |q − q̂|`` computed here per
+    query, ``resid = |c − ĉ|`` cached at index time by
+    :meth:`ShardTopology.centroid_quant` — only their per-pair signs vary,
+    so the combined element error is at most ``u_i := e^q_i + resid_i``
+    (≈ s/2 on average instead of the worst-case ``s``, which roughly
+    halves the bound and with it the fallback rate):
+
+      * L2 — ``d − d̂ = Σ e_i·(2â_i + e_i)`` with ``â = q̂ − ĉ``, so by
+        Cauchy–Schwarz ``|d − d̂| ≤ 2·‖u‖·‖â‖ + ‖u‖²`` where ``‖â‖²`` is
+        the quantized tile value itself and
+        ``‖u‖² = ‖e^q‖² + 2·e^q·residᵀ + ‖resid‖²`` is one small matmul —
+        no ``[Q, S, D]`` intermediate, so the bound costs O(Q·S) on top
+        of the tile instead of re-streaming a 3-D product (the earlier
+        elementwise form spent more bytes than the f32 tile it replaced).
+      * ip — ``|q·c − q̂·ĉ| = |Σ q̂·e^c + ĉ·e^q + e^q·e^c|
+        ≤ |q̂|·resid + |ĉ|·e^q + e^q·resid`` (three small f32 matmuls).
+
+    The split driver uses the bounds to certify each query's routing
+    decision and falls back to the exact f32 tile only for queries whose
+    decision boundary the bound straddles — that is what makes quantized
+    routing *decision-identical* to f32 (the parity the tests pin) while
+    streaming code bytes for the certified majority.
+    """
+    from repro.kernels import ops  # deferred like the f32 tile
+
+    q = np.asarray(queries, np.float32)
+    codes = np.asarray(codes)
+    resid = np.asarray(resid, np.float32)
+    cq = spec.quantize(q)
+    # np.array (not asarray): the device buffer view is read-only and the
+    # driver overwrites ambiguous rows with the exact f32 fallback
+    d = np.array(ops.pairwise_distance_u8(
+        cq, codes, spec.scale, spec.zero_point, metric,
+    ))
+    s = spec.scale
+    lo = spec.zero_point
+    hi = lo + 255.0 * s
+    clipped = ((q < lo) | (q > hi)).any(axis=1)
+    q_hat = spec.dequantize(cq)
+    eq = np.abs(q - q_hat)  # [Q, D] exact query-side residuals
+    if metric == "ip":
+        c_hat = spec.dequantize(codes)
+        err = (np.abs(q_hat) @ resid.T
+               + eq @ np.abs(c_hat).T
+               + eq @ resid.T)
+    else:
+        u2 = ((eq * eq).sum(axis=1)[:, None]
+              + 2.0 * (eq @ resid.T)
+              + (resid * resid).sum(axis=1)[None, :])  # [Q, S] = ‖u‖²
+        err = 2.0 * np.sqrt(u2 * np.maximum(d, 0.0)) + u2
+    return d, err.astype(np.float32), clipped
+
+
+def _ambiguous_routing(
+    sd: np.ndarray,  # [Q, S] tile values sorted ascending per query
+    se: np.ndarray,  # [Q, S] matching error bounds
+    mode: str,
+    count: int,
+    margin: float,
+) -> np.ndarray:
+    """[Q] bool: queries whose routing decision is *not* certified by the
+    quantized tile's error intervals — i.e. the true distances could order
+    differently than the quantized ones across the decision boundary.
+    Exact ties always come back ambiguous (their intervals overlap), so the
+    f32 fallback also owns f32's index-order tie-break."""
+    nq, n_live = sd.shape
+    if mode == "fixed":
+        kk = min(count, n_live)
+        if kk >= n_live:  # probing everything: no boundary to get wrong
+            return np.zeros(nq, bool)
+        left_max = (sd[:, :kk] + se[:, :kk]).max(axis=1)
+        right_min = (sd[:, kk:] - se[:, kk:]).min(axis=1)
+        return left_max >= right_min
+    # auto: keep shards with d <= t where t = d1 + (margin-1)·|d1|.  The
+    # true d1 is the minimum over *all* shards' true distances, so its
+    # interval is [min_i(sd_i - se_i), min_i(sd_i + se_i)] — NOT the
+    # quantized-rank-0 interval alone (a large-error shard further down
+    # the quantized order can own the true minimum); bound t by
+    # evaluating at both ends (f is not monotone for margin > 2 when
+    # d1 < 0, so take the envelope)
+    d1_lo = (sd - se).min(axis=1, keepdims=True)
+    d1_hi = (sd + se).min(axis=1, keepdims=True)
+    t_ends = np.stack([
+        d1_lo + (margin - 1.0) * np.abs(d1_lo),
+        d1_hi + (margin - 1.0) * np.abs(d1_hi),
+    ])
+    t_lo, t_hi = t_ends.min(axis=0), t_ends.max(axis=0)
+    # f has a kink at d1 = 0 (f(0) = 0, a minimum when margin > 2), so an
+    # interval straddling zero needs the kink in its envelope too
+    straddles = (d1_lo < 0) & (d1_hi > 0)
+    t_lo = np.where(straddles, np.minimum(t_lo, 0.0), t_lo)
+    # a shard is decided iff it is surely inside the threshold or surely
+    # outside it; since t >= d1 for any margin >= 1, "surely outside" also
+    # rules out being the forced-kept nearest shard.  No position is
+    # exempt: even the quantized-nearest slot must certify (it may not be
+    # the true nearest).
+    surely_kept = sd + se <= t_lo
+    surely_dropped = sd - se > t_hi
+    return (~(surely_kept | surely_dropped)).any(axis=1)
+
+
 def pad_pool(
     ids: np.ndarray, d: np.ndarray, k: int
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -471,9 +627,12 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     the merged top ``kq`` — not ``nprobe·kq`` — candidates.  Re-ranking
     once after the merge instead of once per shard is what keeps the f32
     traffic a small constant per query, which the bytes-per-distance
-    acceptance claim in BENCH_search.json depends on.  The routing tile
-    stays f32 (centroids are index-time metadata, not the streamed
-    payload).
+    acceptance claim in BENCH_search.json depends on.  With
+    ``dtype="uint8"`` the routing tile is scored on uint8 codes too
+    (:meth:`ShardTopology.centroid_quant` — one shared spec so distances
+    stay comparable across shards), counted as quantized work; ``"bf16"``
+    keeps the f32 tile (the tile is compute-shaped, and bf16's win is
+    storage streaming, not the tiny centroid set).
     """
     queries = np.asarray(queries, np.float32)
     nq = len(queries)
@@ -485,9 +644,34 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     n_live = len(live)
     route = mode != "scatter" and topo.centroids is not None
     if route:
-        cent = np.asarray(topo.centroids, np.float32)[live]
-        qc = _query_centroid_distances(queries, cent, topo.metric)
-        stats.n_distance_computations += nq * n_live
+        if dtype == "uint8":
+            # quantized routing tile + certified-exact fallback: queries
+            # whose decision the code-domain error bound cannot certify
+            # (or that clip outside the spec's range) rescore their row in
+            # f32, so routing decisions are identical to the f32 tile
+            codes, spec, resid = topo.centroid_quant()
+            qc, qerr, amb = _query_centroid_distances_u8(
+                queries, codes[live], spec, resid[live], topo.metric
+            )
+            stats.n_distance_computations += nq * n_live
+            stats.n_quantized_distance_computations += nq * n_live
+            pre = np.argsort(qc, axis=1, kind="stable")
+            amb = amb | _ambiguous_routing(
+                np.take_along_axis(qc, pre, axis=1),
+                np.take_along_axis(qerr, pre, axis=1),
+                mode, count, margin,
+            )
+            n_amb = int(amb.sum())
+            if n_amb:
+                cent = np.asarray(topo.centroids, np.float32)[live]
+                qc[amb] = _query_centroid_distances(
+                    queries[amb], cent, topo.metric
+                )
+                stats.n_distance_computations += n_amb * n_live
+        else:
+            cent = np.asarray(topo.centroids, np.float32)[live]
+            qc = _query_centroid_distances(queries, cent, topo.metric)
+            stats.n_distance_computations += nq * n_live
         # [Q, n_live] positions into `live`, nearest shard first
         order = np.argsort(qc, axis=1, kind="stable")
         if mode == "fixed":

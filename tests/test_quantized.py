@@ -259,18 +259,30 @@ def test_dtype_f32_bit_identical(built, backend):
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("dtype", ["bf16", "uint8"])
 def test_staged_stats_split_is_consistent(built, backend, dtype):
-    """total = quantized + re-rank (+ the f32 routing tile when routed),
-    and the re-rank stage scores at most rerank·k per query — the merged
-    pool is re-ranked once, not once per probed shard."""
+    """total = quantized + re-rank + the routed tile's f32 share, and the
+    re-rank stage scores at most rerank·k per query — the merged pool is
+    re-ranked once, not once per probed shard.
+
+    bf16 keeps the f32 routing tile, so its f32 share is exactly Q·S.
+    uint8 scores the tile on codes (counted as quantized) and pays f32
+    only for the certified-exact fallback rows — a whole-row multiple of
+    S, between 0 and Q·S."""
     ds, b = built
     topo = b.shard_topology(ds.data)
     n_shards = len(topo.shard_ids)
     ids, st = search(topo, ds.queries, 10, backend=backend, width=64,
                      dtype=dtype, nprobe=2, rerank=3)
     route_tile = len(ds.queries) * n_shards
-    assert (st.n_distance_computations
-            == st.n_quantized_distance_computations
-            + st.n_rerank_distance_computations + route_tile)
+    f32_share = (st.n_distance_computations
+                 - st.n_quantized_distance_computations
+                 - st.n_rerank_distance_computations)
+    if dtype == "uint8":
+        assert 0 <= f32_share <= route_tile
+        assert f32_share % n_shards == 0  # fallback rescoring is per row
+        # the quantized side now carries the tile on top of the beam work
+        assert st.n_quantized_distance_computations >= route_tile
+    else:
+        assert f32_share == route_tile
     assert 0 < st.n_rerank_distance_computations <= len(ds.queries) * 30
     per_q = st.per_query()
     assert per_q["rerank_distance_computations"] <= 30
@@ -291,6 +303,140 @@ def test_staged_recall_parity_across_backends(built, dtype):
         recalls[backend] = recall_at(ids, ds.gt, 10)
     for backend in BACKENDS[1:]:
         assert recalls[backend] >= recalls["numpy"] - 0.02, recalls
+
+
+@pytest.mark.parametrize("nprobe", [1, 2, "auto"])
+def test_quantized_routing_tile_matches_f32_decisions(built, nprobe):
+    """PR-5 satellite: with dtype="uint8" the routing tile is scored on
+    codes, but the certified-exact fallback guarantees the *decisions*
+    (each query's probed-shard set) are identical to the f32 tile — for
+    fixed and adaptive nprobe."""
+    from repro.search.types import (_ambiguous_routing,
+                                    _query_centroid_distances,
+                                    _query_centroid_distances_u8,
+                                    parse_nprobe)
+
+    ds, b = built
+    topo = b.shard_topology(ds.data)
+    mode, count, margin = parse_nprobe(nprobe)
+    cent = np.asarray(topo.centroids, np.float32)
+    codes, spec, resid = topo.centroid_quant()
+    qc_f32 = _query_centroid_distances(ds.queries, cent, "l2")
+    qc, qerr, amb = _query_centroid_distances_u8(
+        ds.queries, codes, spec, resid, "l2"
+    )
+    # the certified bound must actually hold where it claims to
+    ok = ~amb
+    assert (np.abs(qc - qc_f32) <= qerr + 1e-4)[ok].all()
+    pre = np.argsort(qc, axis=1, kind="stable")
+    amb = amb | _ambiguous_routing(
+        np.take_along_axis(qc, pre, axis=1),
+        np.take_along_axis(qerr, pre, axis=1), mode, count, margin,
+    )
+    assert amb.mean() < 0.75  # the fallback must stay the minority
+    qc[amb] = qc_f32[amb]
+
+    def probe_sets(tile):
+        order = np.argsort(tile, axis=1, kind="stable")
+        if mode == "fixed":
+            return [frozenset(r[:count]) for r in order]
+        sd = np.take_along_axis(tile, order, axis=1)
+        d1 = sd[:, :1]
+        keep = sd <= d1 + (margin - 1.0) * np.abs(d1)
+        keep[:, 0] = True
+        return [frozenset(o[k]) for o, k in zip(order, keep)]
+
+    assert probe_sets(qc) == probe_sets(qc_f32)
+    # end-to-end: the driver path counts the tile as quantized work
+    _, st = search(topo, ds.queries, 10, backend="numpy", width=64,
+                   dtype="uint8", nprobe=nprobe)
+    n_live = sum(1 for ids in topo.shard_ids if len(ids))
+    assert (st.n_quantized_distance_computations
+            >= len(ds.queries) * n_live)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_uint8_routing_bound_certified_both_metrics(metric):
+    """The per-pair error bound must actually bound |quantized − f32| for
+    non-clipped queries on both metrics (the ip branch has no other
+    coverage — a sign slip there would silently break decision parity on
+    inner-product topologies)."""
+    from repro.search.types import (_query_centroid_distances,
+                                    _query_centroid_distances_u8)
+
+    rng = np.random.default_rng(17)
+    data = rng.normal(size=(400, 24)).astype(np.float32)
+    cent = data[rng.choice(400, size=6, replace=False)] + 0.1 * rng.normal(
+        size=(6, 24)
+    ).astype(np.float32)
+    queries = data[rng.choice(400, size=64, replace=False)]
+    spec = QuantSpec.from_data(data)
+    codes = spec.quantize(cent)
+    resid = np.abs(cent - spec.dequantize(codes)).astype(np.float32)
+    qc, err, clipped = _query_centroid_distances_u8(
+        queries, codes, spec, resid, metric
+    )
+    qf = _query_centroid_distances(queries, cent, metric)
+    ok = ~clipped
+    assert ok.any()
+    assert (np.abs(qc - qf) <= err + 1e-4)[ok].all()
+    assert (err > 0).all()  # a vacuous (zero) bound would certify nothing
+
+
+def test_ambiguous_routing_d1_envelope_spans_all_shards():
+    """Regression: the auto-mode threshold envelope must take the true-d1
+    interval over *all* shards' error intervals.  Here the quantized
+    rank-1 shard (large error) can own the true minimum — with true
+    distances [5.9, 3.5, 7.6] (each inside its certified interval) the
+    exact threshold at margin=2 is 7.0 and drops the last shard, while
+    the quantized threshold (10.0) keeps it.  A rank-0-only envelope
+    certified this query; the correct envelope must flag it ambiguous."""
+    from repro.search.types import _ambiguous_routing
+
+    sd = np.array([[5.0, 5.5, 7.6]], np.float32)
+    se = np.array([[1.0, 2.0, 0.01]], np.float32)
+    assert _ambiguous_routing(sd, se, "auto", 0, 2.0).all()
+    # and a comfortably separated query stays certified
+    sd2 = np.array([[1.0, 10.0, 40.0]], np.float32)
+    se2 = np.array([[0.05, 0.05, 0.05]], np.float32)
+    assert not _ambiguous_routing(sd2, se2, "auto", 0, 2.0).any()
+
+
+def test_beam_pool_n_real_shape_uniform_across_backends(built):
+    """Regression: with n_real set, beam_pool returns [n_real, pool] on
+    every backend (numpy's serial beam truncates, jax materializes the
+    padded lanes — the wrapper normalizes)."""
+    from repro.search import beam_pool
+
+    ds, b = built
+    topo = b.topology(ds.data)
+    graph = topo.index.graph
+    q = np.resize(ds.queries[:5], (8, ds.queries.shape[1]))
+    for backend in ("numpy", "jax"):
+        ids, dists, st = beam_pool(
+            ds.data, graph, topo.index.medoid, q, 16,
+            backend=backend, n_real=5,
+        )
+        assert ids.shape == (5, 16) and dists.shape == (5, 16), backend
+        assert st.n_queries == 5
+
+
+def test_centroid_quant_cached_and_data_ranged(built):
+    """The centroid spec is derived once (cached) and spans the *data*
+    range — the index-time proxy for the queries the tile will score."""
+    ds, b = built
+    topo = b.shard_topology(ds.data)
+    codes, spec, resid = topo.centroid_quant()
+    assert topo.centroid_quant()[0] is codes  # cached
+    g = QuantSpec.from_data(ds.data)
+    assert spec.scale == pytest.approx(g.scale)
+    assert spec.zero_point == pytest.approx(g.zero_point)
+    # exact residuals: dequantized codes + resid bracket the true centroids
+    cent = np.asarray(topo.centroids, np.float32)
+    assert np.abs(cent - spec.dequantize(codes)).max() <= resid.max() + 1e-6
+    np.testing.assert_allclose(
+        np.abs(cent - spec.dequantize(codes)), resid, atol=1e-6
+    )
 
 
 def test_shard_quant_specs_are_per_shard(built):
