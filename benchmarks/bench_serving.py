@@ -19,6 +19,17 @@ and distance computations per query, next to the batch-1 blocking baseline
 
 Acceptance (ISSUE 3): on the 2k fixture the micro-batched server must
 sustain >= 2x the batch-1 blocking QPS at the same recall (jax backend).
+
+Acceptance (ISSUE 6): the fused ``pallas`` engine must beat the jax
+backend on end-to-end served QPS at recall@10 within 0.01
+(``claim.pallas_fused_ge_jax_qps_at_recall_within_001``).  Both backends
+sweep the same rate×window grid plus a shared saturation trial (offered
+load pinned to 4× the measured jax batch-1 rate, so the comparison is
+capacity vs capacity, not offered-rate cap vs offered-rate cap).  The
+``--smoke`` profile additionally drains one tiny trial through the
+force-interpret Pallas kernel — the CI-testable fallback of the fused
+engine — recording its recall next to its (interpreter-priced, not
+claim-bearing) throughput.
 """
 
 from __future__ import annotations
@@ -139,12 +150,12 @@ def main(smoke: bool = False) -> dict:
     topo = merged.topology(ds.data)
 
     if smoke:
-        backends = ("jax",)
+        backends = ("jax", "pallas")
         rates = (1500.0,)
         waits = (2.0, 8.0)
         max_batch, n_requests, warmup, n_batch1 = 32, 512, 256, 96
     else:
-        backends = ("jax", "numpy")
+        backends = ("jax", "pallas", "numpy")
         rates = (500.0, 1500.0, 3000.0)
         waits = (0.5, 2.0, 8.0)
         max_batch, n_requests, warmup, n_batch1 = 128, 2000, 512, 256
@@ -170,10 +181,12 @@ def main(smoke: bool = False) -> dict:
         trials = [(None, r, w, False) for r in rates for w in waits]
         if not smoke:  # the adaptive policy rides the largest window
             trials += [(None, r, max(waits), True) for r in rates]
-        if backend == "jax":
-            # the acceptance trial: offered load pinned to 4× the
-            # *measured* batch-1 rate, so the ≥2× claim can't be capped by
-            # a fixed offered rate on a machine with fast batch-1 calls
+        if backend in ("jax", "pallas"):
+            # the acceptance trials: offered load pinned to 4× the
+            # *measured* jax batch-1 rate, so the ≥2× claim can't be capped
+            # by a fixed offered rate on a machine with fast batch-1 calls
+            # — and the pallas-vs-jax claim compares capacities under one
+            # shared overload, not two different offered-rate caps
             trials.append(("rate=4x-batch1,wait=2ms",
                            4.0 * results["batch1_blocking"]["jax"]["qps"],
                            2.0, False))
@@ -191,6 +204,40 @@ def main(smoke: bool = False) -> dict:
                   f"qps={row['qps']:7.0f} p95={row['latency_ms']['p95']:7.1f}ms "
                   f"occ={row['batch_occupancy']['mean']:5.1f} "
                   f"recall@10={row['recall_at_10']:.3f}")
+
+    # ---- smoke only: drain one tiny trial through the force-interpret
+    # Pallas kernel — the fused engine's CI-testable fallback.  Interpreter
+    # pricing (~ms per query) makes it recall/coverage evidence, not a
+    # throughput number; it never feeds the claims below.
+    if smoke:
+        from repro.kernels import pallas_mode, set_pallas_mode
+
+        prev_mode = pallas_mode()
+        set_pallas_mode("force_interpret")
+        try:
+            row = asyncio.run(run_trial(
+                topo, ds, backend="pallas", rate_qps=100.0, max_wait_ms=8.0,
+                n_requests=48, max_batch=8, warmup=8,
+            ))
+        finally:
+            set_pallas_mode(prev_mode)
+        results["server"]["pallas_interpret"] = {
+            "rate=100/s,wait=8ms,interpret": row}
+        print(f"serve  pallas(interpret) qps={row['qps']:7.0f} "
+              f"recall@10={row['recall_at_10']:.3f}")
+
+    # ---- acceptance: fused pallas engine beats jax on served QPS at
+    # recall@10 within 0.01 (ISSUE 6) --------------------------------------
+    bj = max(results["server"]["jax"].values(), key=lambda r: r["qps"])
+    bp = max(results["server"]["pallas"].values(), key=lambda r: r["qps"])
+    results["pallas_over_jax_qps"] = bp["qps"] / bj["qps"]
+    results["claim.pallas_fused_ge_jax_qps_at_recall_within_001"] = bool(
+        bp["qps"] >= bj["qps"]
+        and bp["recall_at_10"] >= bj["recall_at_10"] - 0.01
+    )
+    print(f"pallas/jax served QPS: {bp['qps'] / bj['qps']:.2f}x "
+          f"(pallas recall {bp['recall_at_10']:.3f} vs "
+          f"jax {bj['recall_at_10']:.3f})")
 
     # ---- acceptance: micro-batching >= 2x batch-1 blocking (jax) ---------
     b1 = results["batch1_blocking"]["jax"]
@@ -213,5 +260,6 @@ def main(smoke: bool = False) -> dict:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run: jax only, one rate, short trials")
+                    help="CI-sized run: jax+pallas, one rate, short trials, "
+                         "plus a tiny force-interpret fused-engine trial")
     main(smoke=ap.parse_args().smoke)

@@ -2,7 +2,8 @@
 
 Sections: 1–3 build, 4 query backends, 5 routed split serving, 6 the
 micro-batching server, 7 quantized distance stages (uint8/bf16 + f32
-re-rank), 8 vectorized vs seed-loop build timing.
+re-rank), 8 vectorized vs seed-loop build timing, 9 the fused
+device-resident beam engine (backend="pallas").
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -115,6 +116,29 @@ def main():
     t_vec = time.perf_counter() - t0
     print(f"[build] seed-loop vamana {t_ref:.2f}s -> vectorized "
           f"{t_vec:.2f}s ({t_ref / t_vec:.1f}x on this slice)")
+
+    # 9. The fused beam engine: backend="pallas" runs the whole search —
+    #    seed scoring, beam traversal, top-k upkeep, and (for staged
+    #    dtypes) the exact-f32 re-rank — as ONE dispatch per batch, with
+    #    candidate state resident in VMEM on TPU (a flat-batch XLA twin
+    #    serves CPU hosts, same answers).  Ids match the jax backend
+    #    bit-for-bit, so it drops into any search()/AnnServer call site;
+    #    BENCH_serving.json records it beating jax on served QPS.
+    jids, jstats = search(res.index, ds.queries, k=10, data=ds.data,
+                          backend="jax", width=96)
+    pids, pstats = search(res.index, ds.queries, k=10, data=ds.data,
+                          backend="pallas", width=96)
+    print(f"[pallas] recall@10 = {recall_at(pids, ds.gt, 10):.3f}  "
+          f"ids identical to jax: {bool(np.array_equal(pids, jids))}  "
+          f"({pstats.n_distance_computations / len(ds.queries):.0f} "
+          f"distance computations / query)")
+    ids, stats = search(shard_topo, ds.queries, k=10, backend="pallas",
+                        width=96, nprobe=2, dtype="uint8", rerank=4)
+    pq = stats.per_query()
+    print(f"[pallas/uint8] recall@10 = {recall_at(ids, ds.gt, 10):.3f}  "
+          f"({pq['quantized_distance_computations']:.0f} quantized + "
+          f"{pq['rerank_distance_computations']:.0f} f32 re-rank dist/q, "
+          f"traversal+re-rank fused on the merged path)")
 
 
 if __name__ == "__main__":

@@ -46,24 +46,55 @@ def _distance_kernel(q_ref, x_ref, out_ref, *, metric: str):
         out_ref[...] = -dots
 
 
+def _u8_code_dots(q_codes, x_codes):
+    """Exact uint8 code dot products off an **int8 MXU matmul**.
+
+    The MXU's native low-precision mode is int8×int8→int32; uint8 operands
+    would be upcast to int32 in VREGs and lose it.  Re-centering each code
+    by 128 lands in int8 exactly — on uint8 that is a bitwise ``^ 0x80``
+    plus a bitcast, no widening — and the shift is undone with the code
+    *sums* (one VPU reduction per panel, needed for the IP affine term
+    anyway):
+
+        Σ q·x = Σ (q−128)(x−128) + 128·(Σq + Σx) − D·128²
+
+    Every term is integer-exact in int32 (codes ≤ 255, D ≤ 2¹⁵), so the
+    result is bit-identical to the old widened-uint8 matmul.  ``D`` here is
+    the *padded* width: zero-code padding contributes (0−128)² = 128² per
+    padded column to the int8 product, and the constant term removes
+    exactly that.
+
+    Returns ``(dots [bm, bn] int32, sq [bm, 1] int32, sx [1, bn] int32)``.
+    """
+    d_pad = q_codes.shape[1]
+    q8 = jax.lax.bitcast_convert_type(q_codes ^ jnp.uint8(0x80), jnp.int8)
+    x8 = jax.lax.bitcast_convert_type(x_codes ^ jnp.uint8(0x80), jnp.int8)
+    dots8 = jax.lax.dot_general(
+        q8, x8, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # [bm, bn] int8-MXU accumulation
+    sq = jnp.sum(q_codes.astype(jnp.int32), axis=1, keepdims=True)
+    sx = jnp.sum(x_codes.astype(jnp.int32), axis=1)[None, :]
+    dots = dots8 + 128 * (sq + sx) - d_pad * (128 * 128)
+    return dots, sq, sx
+
+
 def _distance_kernel_u8(q_ref, x_ref, s_ref, zp_ref, out_ref, *,
                         metric: str, d_real: int):
     """Integer-accumulated distance tile over shared-spec uint8 codes.
 
     The panels stream HBM→VMEM at 1 byte/element (4× less traffic than the
-    f32 kernel); the MXU matmul accumulates int32 over the codes and the
-    affine correction runs on the VPU in f32.  ``scale``/``zero_point``
-    arrive as (1, 1) SMEM scalars so per-shard specs don't recompile the
-    kernel; ``d_real`` is the pre-padding dimension (zero codes pad D —
-    they cancel in L2 and contribute nothing to the IP sums, but the
-    ``D·zp²`` affine term must use the true D).
+    f32 kernel); the matmul runs in the MXU's native int8 mode
+    (:func:`_u8_code_dots`) and the affine correction runs on the VPU in
+    f32.  ``scale``/``zero_point`` arrive as (1, 1) SMEM scalars so
+    per-shard specs don't recompile the kernel; ``d_real`` is the
+    pre-padding dimension (zero codes pad D — they cancel in L2 and
+    contribute nothing to the IP sums, but the ``D·zp²`` affine term must
+    use the true D).
     """
     qi = q_ref[...].astype(jnp.int32)  # [bm, D] codes
     xi = x_ref[...].astype(jnp.int32)  # [bn, D] codes
     s = s_ref[0, 0]
-    dots = jax.lax.dot_general(
-        qi, xi, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
-    )  # [bm, bn] exact
+    dots, _, _ = _u8_code_dots(q_ref[...], x_ref[...])  # [bm, bn] exact
     if metric == "l2":
         # shared zero-point cancels: d = s²·‖cq − cx‖²
         qn = jnp.sum(qi * qi, axis=1, keepdims=True)

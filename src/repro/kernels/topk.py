@@ -44,11 +44,32 @@ def _xor_permute(a: jax.Array, stride: int) -> jax.Array:
     return a.reshape(shape)
 
 
-def bitonic_sort_pairs(vals: jax.Array, idxs: jax.Array):
-    """Ascending bitonic sort of (vals, idxs) along the last axis.
+def bitonic_sort_lex(
+    vals: jax.Array,
+    idxs: jax.Array,
+    payloads: tuple = (),
+    *,
+    tie_by_index: bool = False,
+):
+    """Ascending bitonic sort of (vals, idxs[, *payloads]) along the last
+    axis.
 
     Last-axis length must be a power of two.  Pure compare-exchange network:
-    O(log² L) stages of elementwise select — no data-dependent control flow.
+    O(log² L) stages of elementwise select — no data-dependent control flow,
+    no gather — so it lowers on Mosaic and is the in-VMEM sort the fused
+    beam kernel runs on its candidate state.
+
+    ``tie_by_index=True`` sorts by the lexicographic key ``(val, idx)``
+    instead of ``val`` alone — with distinct indices the key is a total
+    order, which makes the network's output *deterministic and stable-like*
+    (equal values come out in ascending index order).  That is exactly
+    ``lax.top_k``'s tie rule, so the fused beam's keep step can reproduce
+    the jax backend's candidate lists bit-for-bit; it is also the
+    ``(distance, id)`` tie-break of the re-rank epilogues.
+
+    ``payloads`` ride along through every compare-exchange (same permutation
+    as the keys): the beam kernel carries candidate ids and expanded flags
+    next to its (distance, position) sort keys.
     """
     length = vals.shape[-1]
     if length & (length - 1):
@@ -57,6 +78,7 @@ def bitonic_sort_pairs(vals: jax.Array, idxs: jax.Array):
     # close over host arrays).  Lane-shaped so it broadcasts over rows.
     iota_shape = (1,) * (vals.ndim - 1) + (length,)
     iota = jax.lax.broadcasted_iota(jnp.int32, iota_shape, vals.ndim - 1)
+    payloads = list(payloads)
     n_stages = length.bit_length() - 1
     for size_exp in range(1, n_stages + 1):
         size = 1 << size_exp
@@ -67,9 +89,24 @@ def bitonic_sort_pairs(vals: jax.Array, idxs: jax.Array):
             up = (iota & size) == 0  # ascending run?
             i_low = (iota & stride) == 0  # lower element of its pair?
             take_min = jnp.where(i_low, up, ~up)
-            keep = jnp.where(take_min, vals <= pv, vals >= pv)
+            if tie_by_index:
+                le = (vals < pv) | ((vals == pv) & (idxs <= pi))
+                ge = (vals > pv) | ((vals == pv) & (idxs >= pi))
+                keep = jnp.where(take_min, le, ge)
+            else:
+                keep = jnp.where(take_min, vals <= pv, vals >= pv)
             vals = jnp.where(keep, vals, pv)
             idxs = jnp.where(keep, idxs, pi)
+            payloads = [
+                jnp.where(keep, p, _xor_permute(p, stride)) for p in payloads
+            ]
+    return vals, idxs, tuple(payloads)
+
+
+def bitonic_sort_pairs(vals: jax.Array, idxs: jax.Array):
+    """Ascending bitonic sort of (vals, idxs) along the last axis (the
+    historical two-array entry point; see :func:`bitonic_sort_lex`)."""
+    vals, idxs, _ = bitonic_sort_lex(vals, idxs)
     return vals, idxs
 
 

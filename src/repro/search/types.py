@@ -206,6 +206,28 @@ class ShardTopology:
     _centroid_quant: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
+    # cached per-shard f32 row slices (derived, like _entries)
+    _store_cache: list | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+
+    def shard_store(self) -> list:
+        """Cached per-shard f32 row slices, ``[n_i, D]`` per shard.
+
+        ``data[ids]`` fancy-indexing materializes a *fresh* array on every
+        call, which defeats any backend that caches device buffers by
+        storage identity (the fused ``pallas`` engine keys its
+        host→device cache on ``id(storage)``).  Slicing once per topology
+        gives every search over a shard the same host object — the f32
+        analogue of :meth:`shard_quant`'s cached views, and the same
+        memory the per-call slices were allocating transiently.
+        """
+        if self._store_cache is None:
+            self._store_cache = [
+                np.asarray(self.data[ids], np.float32)
+                for ids in self.shard_ids
+            ]
+        return self._store_cache
 
     def shard_quant(self, dtype: str) -> list:
         """Per-shard ``(storage, QuantSpec | None)`` views for a staged
@@ -349,6 +371,13 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
     distance, and finishes with the shared exact-f32 re-rank epilogue
     (:func:`repro.kernels.ops.rerank_exact`) — counted separately in the
     stats.
+
+    A backend whose beam carries a ``fused_merged`` attribute (the
+    device-resident ``pallas`` engine) gets the whole staged search handed
+    back to it instead: it runs traversal *and* the exact re-rank in one
+    device dispatch, with the same candidate widening (``kq``), the same
+    ``(distance, id)`` tie-break, and the same stats accounting as the
+    host epilogue below.
     """
     entries = (
         topo.index.entry_points(n_entries) if n_entries > 1
@@ -360,10 +389,14 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
             width=width, n_iters=n_iters, metric=topo.metric,
         )
         return ids, stats
+    kq = min(rerank * k, width)
+    fused = getattr(beam_fn, "fused_merged", None)
+    if fused is not None:
+        return fused(topo, entries, queries, k, kq, width=width,
+                     n_iters=n_iters, dtype=dtype)
     from repro.kernels import ops  # deferred: keep the f32 path jax-free
 
     store, spec = topo.quant_view(dtype)
-    kq = min(rerank * k, width)
     cand, _, stats = beam_fn(
         store, topo.index.graph, entries, queries, kq,
         width=width, n_iters=n_iters, metric=topo.metric,
@@ -700,6 +733,8 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     if staged:
         shard_store = topo.shard_quant(dtype)
         kq = min(rerank * k, width)
+    else:
+        f32_store = topo.shard_store()  # cached: stable storage identity
     pool_ids = np.full((nq, n_probe, kq), -1, np.int64)
     pool_d = np.full((nq, n_probe, kq), np.inf, np.float32)
     for p, s in enumerate(live):
@@ -717,7 +752,7 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
             store, spec = shard_store[s]
             quant_kw = {"quant": spec if spec is not None else dtype}
         else:
-            store, quant_kw = np.asarray(topo.data[ids]), {}
+            store, quant_kw = f32_store[s], {}
         local, ld, s_stats = beam_fn(
             store, topo.shard_graphs[s],
             int(entries[s]), queries[use_rows], min(kq, len(ids)),

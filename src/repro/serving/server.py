@@ -83,6 +83,13 @@ class ServingConfig:
     batch (the worker does it off-loop at startup; requests submitted
     meanwhile just queue) — otherwise the first occurrence of each shape
     pays a multi-second jit trace inside some request's latency.
+    ``pretrace_dtypes`` extends the warm-up to the full cross-product of
+    the listed distance stages × bucket sizes: a deployment that accepts
+    per-request ``dtype`` overrides (the worker groups batches by
+    ``(nprobe, dtype)``) should list every stage it serves, or the first
+    mixed-dtype batch hits a mid-traffic retrace.  Empty (the default)
+    warms only the config-default ``dtype`` — the historical behavior,
+    and the right one when traffic is single-stage.
     """
 
     k: int = 10
@@ -100,6 +107,7 @@ class ServingConfig:
     adaptive_window: bool = False
     bucket_batches: bool = True
     pretrace: bool = True  # warm every bucketed shape before serving
+    pretrace_dtypes: tuple = ()  # extra distance stages to warm (×buckets)
     run_in_executor: bool = True  # False: call the engine on the loop
 
 
@@ -145,6 +153,8 @@ class AnnServer:
                                                 metric=cfg.metric)
         parse_nprobe(cfg.nprobe)  # fail fast on a bad default spec
         parse_dtype(cfg.dtype)  # ...a bad distance stage
+        for dt in cfg.pretrace_dtypes:  # ...a bad extra warm-up stage
+            parse_dtype(dt)
         get_backend(cfg.backend)  # ...and on an unknown backend name
         if cfg.width < cfg.k:  # ...and before search() would refuse it
             raise ValueError(
@@ -316,27 +326,33 @@ class AnnServer:
         stand in for queries), so jit tracing is a startup cost instead of
         a latency spike on the first unlucky request of each occupancy.
 
-        Only the *config-default* ``(nprobe, dtype)`` path is warmed —
-        per-request overrides (and the routed split driver's
-        data-dependent per-shard group shapes) can still trace on first
-        use; a latency-critical deployment should fix its options
-        server-wide.  Warming every dtype would triple the startup cost
-        for buckets mixed traffic may never hit — the trade the
-        mixed-dtype serving test pins down.  With
-        ``bucket_batches=False`` occupancies are unbounded-shape anyway,
-        so there is nothing useful to warm (see ``_serve_loop``)."""
+        By default only the *config-default* ``(nprobe, dtype)`` path is
+        warmed — warming every dtype would triple the startup cost for
+        buckets single-stage traffic never hits.  A deployment that
+        serves per-request ``dtype`` overrides lists its stages in
+        ``pretrace_dtypes`` and gets the full dtypes × bucket-sizes
+        cross-product warmed instead, so the first mixed-dtype flush
+        doesn't pay a mid-traffic retrace (the worker groups batches by
+        ``(nprobe, dtype)``, so each listed stage really is a distinct
+        engine-call shape).  ``nprobe`` overrides (and the routed split
+        driver's data-dependent per-shard group shapes) can still trace
+        on first use.  With ``bucket_batches=False`` occupancies are
+        unbounded-shape anyway, so there is nothing useful to warm (see
+        ``_serve_loop``)."""
         cfg = self.config
         sizes = {bucket_batch_size(cfg.max_batch, cfg.max_batch)}
         b = 1
         while b < cfg.max_batch:
             sizes.add(b)
             b <<= 1
+        dtypes = dict.fromkeys((cfg.dtype, *cfg.pretrace_dtypes))
         data = np.asarray(self.topology.data, np.float32)
         for size in sorted(sizes):
             qs = np.resize(data[: min(len(data), size)], (size, self._dim))
-            search(self.topology, qs, cfg.k, backend=cfg.backend,
-                   width=cfg.width, n_entries=cfg.n_entries,
-                   nprobe=cfg.nprobe, dtype=cfg.dtype, rerank=cfg.rerank)
+            for dtype in dtypes:
+                search(self.topology, qs, cfg.k, backend=cfg.backend,
+                       width=cfg.width, n_entries=cfg.n_entries,
+                       nprobe=cfg.nprobe, dtype=dtype, rerank=cfg.rerank)
 
     def _execute(self, batch: list[PendingRequest]) -> list[np.ndarray]:
         """One flushed batch → engine calls, grouped by the per-request
