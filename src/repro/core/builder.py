@@ -21,6 +21,29 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+
+class ShardBuildError(RuntimeError):
+    """One or more shard builds failed after exhausting their retries.
+
+    ``errors`` maps shard index → the final exception; ``attempts`` maps
+    shard index → how many attempts that shard consumed.  Successful
+    shards' work is *not* discarded by the raising path — the exception
+    surfaces everything the caller needs to diagnose or re-drive the
+    failed shards.
+    """
+
+    def __init__(self, errors: dict, attempts: dict):
+        self.errors = dict(errors)
+        self.attempts = dict(attempts)
+        detail = "; ".join(
+            f"shard {i}: {type(e).__name__}: {e} "
+            f"(after {attempts.get(i, '?')} attempts)"
+            for i, e in sorted(errors.items())
+        )
+        super().__init__(
+            f"{len(errors)} shard build(s) failed after retries — {detail}"
+        )
+
 from repro.configs.base import IndexConfig
 from repro.core import cagra, vamana
 from repro.core.merge import GlobalIndex, merge_shard_indexes
@@ -53,6 +76,8 @@ class BuildResult:
     n_distance_computations: int
     stats: dict
     centroids: np.ndarray | None = None  # [n_shards, D] partition centroids
+    shard_attempts: list[int] | None = None  # per-shard build attempts
+    shard_errors: list[str] | None = None  # per-shard last retried error
 
     @property
     def overall_s(self) -> float:
@@ -118,6 +143,8 @@ def _build_shards(
     algo: str = "cagra",
     n_workers: int = 1,
     reference: bool = False,
+    max_retries: int = 2,
+    retry_backoff_s: float = 0.05,
 ):
     build = (REFERENCE_BUILDERS if reference else BUILDERS)[algo]
     if algo == "vamana" and not reference and shards:
@@ -128,11 +155,29 @@ def _build_shards(
         build = functools.partial(build, pad_to=pad)
     per_shard_s = [0.0] * len(shards)
     results: list = [None] * len(shards)
+    attempts = [0] * len(shards)
+    last_error: list[str | None] = [None] * len(shards)
+    failures: dict[int, BaseException] = {}
 
     def one(i: int):
-        t0 = time.perf_counter()
+        """One shard, with bounded retry + capped exponential backoff — a
+        transient failure (OOM burst, flaky accelerator) must not abort the
+        other shards' work (paper §IV: failed tasks are re-allocated, not
+        fatal).  The final failure is recorded, not raised, so every shard
+        gets its full retry budget before the build surfaces one error."""
         vecs = np.asarray(data[shards[i].ids])
-        results[i] = build(vecs, cfg)
+        t0 = time.perf_counter()
+        for attempt in range(max_retries + 1):
+            attempts[i] = attempt + 1
+            try:
+                results[i] = build(vecs, cfg)
+                break
+            except Exception as e:  # noqa: BLE001 — recorded + re-raised
+                last_error[i] = f"{type(e).__name__}: {e}"
+                if attempt == max_retries:
+                    failures[i] = e
+                else:
+                    time.sleep(min(retry_backoff_s * (2 ** attempt), 2.0))
         per_shard_s[i] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -143,7 +188,11 @@ def _build_shards(
         with ThreadPoolExecutor(max_workers=n_workers) as pool:
             list(pool.map(one, range(len(shards))))
     wall = time.perf_counter() - t0
-    return results, per_shard_s, wall
+    if failures:
+        raise ShardBuildError(
+            failures, {i: attempts[i] for i in failures}
+        )
+    return results, per_shard_s, wall, attempts, last_error
 
 
 def build_scalegann(
@@ -154,19 +203,29 @@ def build_scalegann(
     n_workers: int = 1,
     selective: bool = True,
     reference: bool = False,
+    max_retries: int = 2,
+    retry_backoff_s: float = 0.05,
 ) -> BuildResult:
     """The paper's system: selective-replication partition → parallel shard
     builds → edge-union merge.  ``selective=False`` gives DiskANN's uniform
     replication (Table IV 'Original').  ``reference=True`` runs the
     seed-loop (pre-vectorization) shard-build and merge hot loops — the
-    baseline ``bench_build.py`` reports speedups against."""
+    baseline ``bench_build.py`` reports speedups against.
+
+    A shard build that raises is retried up to ``max_retries`` times with
+    capped exponential backoff (``retry_backoff_s`` base) instead of
+    aborting the whole build; per-shard attempt counts / last retried
+    errors land in ``BuildResult.shard_attempts`` / ``.shard_errors``, and
+    a shard that exhausts its budget raises :class:`ShardBuildError`
+    carrying every failed shard's error."""
     t0 = time.perf_counter()
     part: PartitionResult = partition(data, cfg, selective=selective)
     partition_s = time.perf_counter() - t0
 
-    idxs, per_shard_s, wall = _build_shards(
+    idxs, per_shard_s, wall, attempts, errors = _build_shards(
         data, part.shards, cfg, algo=algo, n_workers=n_workers,
-        reference=reference,
+        reference=reference, max_retries=max_retries,
+        retry_backoff_s=retry_backoff_s,
     )
 
     t0 = time.perf_counter()
@@ -188,6 +247,8 @@ def build_scalegann(
         n_distance_computations=sum(i.n_distance_computations for i in idxs),
         stats=dict(part.stats),
         centroids=part.centroids,
+        shard_attempts=attempts,
+        shard_errors=errors,
     )
 
 
@@ -257,7 +318,7 @@ def build_split_only(
     shards, centroids, partition_s = _split_partition(
         data, cfg, kmeans=kmeans_split
     )
-    idxs, per_shard_s, wall = _build_shards(
+    idxs, per_shard_s, wall, attempts, errors = _build_shards(
         data, shards, cfg, algo="cagra", n_workers=n_workers
     )
     return BuildResult(
@@ -273,6 +334,8 @@ def build_split_only(
         n_distance_computations=sum(i.n_distance_computations for i in idxs),
         stats={"n": len(data), "replica_proportion": 0.0},
         centroids=centroids,
+        shard_attempts=attempts,
+        shard_errors=errors,
     )
 
 

@@ -73,6 +73,27 @@ def cpu_only_cost(
     )
 
 
+def fleet_cost(
+    makespan_s: float,
+    accelerator_active_s: float,
+    n_shards: int,
+    shard_bytes: float,
+    *,
+    cpu: InstanceType = CPU_MACHINE,
+    accel: InstanceType = V100_SPOT,
+    bandwidth_gbps: float = 10.0,
+) -> CostBreakdown:
+    """Price one fleet build (real-executor or simulated): the CPU
+    coordinator is billed for the whole makespan, accelerators for their
+    active time, and the §VI-C shard-transfer bound rides on both — the
+    calibrated reporting path ``repro.fleet`` / ``bench_fleet.py`` use for
+    spot-vs-on-demand comparisons."""
+    xfer = transfer_time_s(n_shards, shard_bytes, bandwidth_gbps)
+    return scalegann_cost(
+        makespan_s, accelerator_active_s, xfer, cpu=cpu, accel=accel
+    )
+
+
 def paper_example() -> dict:
     """§VI-C worked example, Laion100M (R=64, L=128):
 

@@ -108,6 +108,7 @@ class Task:
     started_at: float = 0.0
     finished_at: float = 0.0
     speculative_of: Optional[int] = None  # straggler duplicate of task tid
+    deadline_s: float = math.inf  # EDD policy input (inf = no deadline)
 
 
 # ---------------------------------------------------------------------------
@@ -127,16 +128,40 @@ class RuntimeModel:
 
 
 def calibrate_runtime(
-    build_fn: Callable[[np.ndarray], object],
+    build_fn: Callable[[np.ndarray], object] | None,
     data: np.ndarray,
     sample_sizes: tuple[int, ...] = (512, 1024, 2048),
     *,
     timer: Callable[[], float] | None = None,
     seed: int = 0,
+    cfg=None,
+    backend: str = "numpy",
 ) -> RuntimeModel:
     """Paper §IV: 'sample multiple tiny subsets from the dataset and measure
-    their index construction time', then fit time ≈ a·size + b."""
+    their index construction time', then fit time ≈ a·size + b.
+
+    ``build_fn=None`` calibrates against the *real* vectorized shard
+    builder (``core.vamana.build_shard_index_vamana`` with ``cfg``, or
+    paper-shaped small defaults) — the model the fleet executor and
+    :func:`Scheduler` estimates use by default, instead of hand-set
+    constants.  A warm-up build at the smallest sample size runs first so
+    one-off trace/compile time doesn't leak into the linear fit (it would
+    show up as a wildly inflated intercept *and* slope on jitted
+    backends)."""
     import time as _time
+
+    if build_fn is None:
+        from repro.configs.base import IndexConfig
+        from repro.core.vamana import build_shard_index_vamana
+
+        build_cfg = cfg or IndexConfig(
+            n_clusters=1, degree=16, build_degree=32, block_size=1024
+        )
+        build_fn = lambda x: build_shard_index_vamana(  # noqa: E731
+            x, build_cfg, backend=backend
+        )
+        warm = min(min(sample_sizes), len(data))
+        build_fn(np.asarray(data[:warm]))  # warm-up: pay traces off-fit
 
     timer = timer or _time.perf_counter
     rng = np.random.default_rng(seed)
@@ -151,6 +176,61 @@ def calibrate_runtime(
     a, b = np.polyfit(np.asarray(xs, float), np.asarray(ys, float), 1)
     return RuntimeModel(seconds_per_vector=max(float(a), 1e-12),
                         fixed_overhead_s=max(float(b), 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Pluggable scheduling policies (paper §IV policies stay the admission
+# layer; the *ordering* of pending tasks and the instance preference are
+# policy decisions — shared by the virtual-clock Scheduler below and the
+# real-build fleet executor in ``repro.fleet``)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostGreedyPolicy:
+    """The paper's default posture: largest task first (longest-processing-
+    time packing), cheapest-feasible instance, spot preferred over
+    on-demand ('always prefers activating the spot GPU instances')."""
+
+    name: str = "cost_greedy"
+
+    def task_key(self, task: Task, model: RuntimeModel) -> tuple:
+        return (-task.size,)
+
+    def instance_key(self, inst: Instance) -> tuple:
+        speed = max(inst.itype.speed, 1e-9)
+        return (
+            not inst.itype.spot,
+            inst.itype.price_per_hour / speed,
+            -inst.itype.speed,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlinePolicy:
+    """Earliest-due-date (EDD): tasks carry ``deadline_s`` and the most
+    urgent pending task dispatches first, onto the *fastest* feasible
+    instance (price is secondary when a deadline is at risk).  Tasks
+    without deadlines fall back to largest-first among themselves."""
+
+    name: str = "edd"
+
+    def task_key(self, task: Task, model: RuntimeModel) -> tuple:
+        return (task.deadline_s, -task.size)
+
+    def instance_key(self, inst: Instance) -> tuple:
+        speed = max(inst.itype.speed, 1e-9)
+        return (
+            -inst.itype.speed,
+            inst.itype.price_per_hour / speed,
+            not inst.itype.spot,
+        )
+
+
+SCHEDULING_POLICIES = {
+    "cost_greedy": CostGreedyPolicy,
+    "edd": DeadlinePolicy,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -190,10 +270,12 @@ class Scheduler:
         straggler_factor: float = 0.0,  # 0 disables speculation
         slowdown: Callable[[int, int], float] | None = None,
         # slowdown(iid, tid) -> multiplicative runtime factor (stragglers)
+        policy: "CostGreedyPolicy | DeadlinePolicy | None" = None,
     ):
         self.tasks = {t.tid: t for t in tasks}
         self.instances = {i.iid: i for i in instances}
         self.model = runtime_model
+        self.policy = policy or CostGreedyPolicy()
         self.checkpoint_resume = checkpoint_resume
         self.checkpoint_interval_s = checkpoint_interval_s
         self.straggler_factor = straggler_factor
@@ -233,8 +315,9 @@ class Scheduler:
         return est <= inst.time_remaining(self.now)  # (2) time-based
 
     def _pick_instance(self, task: Task) -> Optional[Instance]:
-        """Cheapest-feasible among *idle* instances, ties to fastest
-        (heterogeneous extension); among equal SKUs prefer spot (paper:
+        """Best feasible among *idle* instances, ranked by the active
+        :class:`SchedulingPolicy` (default :class:`CostGreedyPolicy`:
+        cheapest-feasible, ties to fastest, spot preferred — the paper's
         'always prefers activating the spot GPU instances')."""
         cands = [
             self.instances[i] for i in self._idle
@@ -242,19 +325,13 @@ class Scheduler:
         ]
         if not cands:
             return None
-        return min(
-            cands,
-            key=lambda i: (
-                not i.itype.spot,
-                i.itype.price_per_hour / max(i.itype.speed, 1e-9),
-                -i.itype.speed,
-            ),
-        )
+        return min(cands, key=self.policy.instance_key)
 
     def _push_pending(self, task: Task) -> None:
         heapq.heappush(
             self._pending,
-            (task.speculative_of is None, -task.size, task.tid),
+            (task.speculative_of is None,
+             *self.policy.task_key(task, self.model), task.tid),
         )
 
     # --- lifecycle ---

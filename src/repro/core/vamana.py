@@ -39,10 +39,37 @@ reproducible.
 
 from __future__ import annotations
 
+import dataclasses
+import math
+from typing import Callable, Optional
+
 import numpy as np
 
 from repro.configs.base import IndexConfig
 from repro.core.cagra import ShardIndex
+
+
+@dataclasses.dataclass
+class VamanaRoundState:
+    """Snapshot handed to ``round_hook`` after every completed insertion
+    round — the natural checkpoint grain of the batched build.
+
+    A round is a pure function of (graph, batch, data), and the batch
+    schedule is derived deterministically from ``seed``, so this snapshot
+    is everything a bit-compatible resume needs: restore ``graph`` and the
+    ``(pass_idx, next_start)`` cursor and the remaining rounds replay
+    exactly (asserted by tests/test_fleet.py).  ``graph`` is a copy of the
+    real rows (padding excluded) — the hook may keep or serialize it.
+    """
+
+    round_idx: int  # completed rounds so far, across both α passes
+    n_rounds_total: int
+    pass_idx: int  # which α pass (0: α=1 pass, 1: α pass)
+    next_start: int  # batch offset the *next* round would start at
+    graph: np.ndarray  # [n, R] int64 copy
+    n_distance_computations: int
+    n: int = 0
+    R: int = 0
 
 
 def _dists(data: np.ndarray, ids: np.ndarray, p: np.ndarray) -> np.ndarray:
@@ -284,6 +311,8 @@ def build_shard_index_vamana(
     backend: str = "jax",
     batch_size: int | None = None,
     pad_to: int | None = None,
+    round_hook: Optional[Callable[[VamanaRoundState], None]] = None,
+    resume: object | None = None,
 ) -> ShardIndex:
     """Batched Vamana build of one shard (degree R = cfg.degree, search
     width L = cfg.build_degree).
@@ -303,6 +332,21 @@ def build_shard_index_vamana(
     build pay the ``jax`` trace once instead of once per distinct shard
     size.  Padding rows are all ``-1`` in the graph, so the beam can never
     reach them; they cost O(pad) memset per round, not distance work.
+
+    Preemption/checkpoint surface (the spot-fleet story, paper §IV):
+    ``round_hook`` fires after every completed round with a
+    :class:`VamanaRoundState` snapshot; a hook that raises aborts the build
+    at the round boundary (``repro.fleet`` raises
+    :class:`~repro.fleet.Preempted` carrying the saved checkpoint).
+    ``resume`` is any object with ``pass_idx`` / ``next_start`` / ``graph``
+    / ``n_distance_computations`` attributes (a ``VamanaRoundState`` or a
+    ``repro.fleet.ShardCheckpoint``): the build restores the graph and the
+    round cursor and continues **bit-compatibly** — the resumed build's
+    final graph is identical to an uninterrupted one because the batch
+    schedule is replayed from ``seed`` and each round is deterministic in
+    (graph, batch, data).  Resume must use the same ``seed`` /
+    ``batch_size`` / ``alpha`` as the original build (checked where the
+    checkpoint records them).
     """
     data = np.asarray(vectors, np.float32)
     n = len(data)
@@ -321,11 +365,33 @@ def build_shard_index_vamana(
     order = rng.permutation(n)
     nb = batch_size or DEFAULT_BUILD_BATCH
     pool = max(L, R + 1)  # the visited pool RobustPrune consumes
+    rounds_per_pass = max(1, math.ceil(n / nb))
+    n_rounds_total = 2 * rounds_per_pass
+
+    start_pass, start_off = 0, 0
+    if resume is not None:
+        ck_n = getattr(resume, "n", n) or n
+        ck_r = getattr(resume, "R", R) or R
+        if ck_n != n or ck_r != R:
+            raise ValueError(
+                f"resume checkpoint shape mismatch: checkpoint n={ck_n} "
+                f"R={ck_r} vs build n={n} R={R}"
+            )
+        graph[:n] = np.asarray(resume.graph, np.int64)
+        counter[0] = int(resume.n_distance_computations)
+        start_pass = int(resume.pass_idx)
+        start_off = int(resume.next_start)
+        if start_off >= n:  # checkpoint taken at a pass boundary
+            start_pass += 1
+            start_off = 0
 
     from repro.search import beam_pool  # deferred: keeps core import-light
 
-    for a in (1.0, alpha):  # two passes per the paper
-        for s in range(0, n, nb):
+    for pi, a in enumerate((1.0, alpha)):  # two passes per the paper
+        if pi < start_pass:
+            continue
+        s0 = start_off if pi == start_pass else 0
+        for s in range(s0, n, nb):
             batch = order[s : s + nb]
             m = len(batch)
             rows = np.resize(batch, nb)  # cycle real points: stable shapes
@@ -349,6 +415,17 @@ def build_shard_index_vamana(
             _apply_reverse_edges(
                 batch, pruned, graph, data, a, R, counter
             )
+            if round_hook is not None:
+                round_hook(VamanaRoundState(
+                    round_idx=pi * rounds_per_pass + (s // nb) + 1,
+                    n_rounds_total=n_rounds_total,
+                    pass_idx=pi,
+                    next_start=s + nb,
+                    graph=graph[:n].copy(),
+                    n_distance_computations=counter[0],
+                    n=n,
+                    R=R,
+                ))
     return ShardIndex(
         graph=graph[:n].astype(np.int32), n_distance_computations=counter[0]
     )

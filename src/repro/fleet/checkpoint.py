@@ -1,0 +1,136 @@
+"""Round-grain shard-build checkpoints (paper §IV re-allocation, §VIII
+checkpoint-resume future work — made real here).
+
+The batched Vamana build advances in insertion rounds, and a round boundary
+is a complete, deterministic restart point: the graph rows plus the
+``(pass_idx, next_start)`` cursor fully determine the remaining build (the
+batch schedule replays from ``seed``).  :class:`ShardCheckpoint` freezes
+that state together with the build parameters it must match on resume;
+:class:`CheckpointStore` keeps the *serialized* bytes (optionally mirrored
+to disk) so every resume exercises the same round-trip a real spot fleet
+would — a checkpoint that only survives in process memory proves nothing
+about surviving a preemption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import pathlib
+import threading
+
+import numpy as np
+
+FORMAT_VERSION = 1
+
+_META_FIELDS = (
+    "format_version", "shard", "pass_idx", "next_start",
+    "n_distance_computations", "n", "R", "seed", "batch_size",
+    "round_idx", "n_rounds_total",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCheckpoint:
+    """Everything a bit-compatible mid-build resume needs for one shard.
+
+    Duck-type compatible with ``build_shard_index_vamana(resume=...)``
+    (``pass_idx`` / ``next_start`` / ``graph`` / ``n_distance_computations``
+    / ``n`` / ``R``); the extra fields pin the build parameters the resume
+    must reuse and the provenance the fleet telemetry reports.
+    """
+
+    shard: int
+    pass_idx: int
+    next_start: int
+    graph: np.ndarray  # [n, R] int64 — real rows only, no padding
+    n_distance_computations: int
+    n: int
+    R: int
+    seed: int
+    batch_size: int
+    round_idx: int
+    n_rounds_total: int
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        meta = np.asarray(
+            [FORMAT_VERSION, self.shard, self.pass_idx, self.next_start,
+             self.n_distance_computations, self.n, self.R, self.seed,
+             self.batch_size, self.round_idx, self.n_rounds_total],
+            np.int64,
+        )
+        np.savez_compressed(
+            buf, meta=meta, graph=np.asarray(self.graph, np.int64)
+        )
+        return buf.getvalue()
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "ShardCheckpoint":
+        with np.load(io.BytesIO(raw)) as z:
+            meta = z["meta"]
+            graph = z["graph"]
+        fields = dict(zip(_META_FIELDS, (int(v) for v in meta)))
+        version = fields.pop("format_version")
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported checkpoint format {version} "
+                f"(expected {FORMAT_VERSION})"
+            )
+        return ShardCheckpoint(graph=graph, **fields)
+
+
+class CheckpointStore:
+    """Thread-safe latest-checkpoint-per-shard store.
+
+    ``save`` serializes immediately; ``load`` deserializes from the stored
+    bytes — so the serialize→deserialize round-trip is on the actual
+    resume path, not just in a unit test.  Pass ``directory`` to also
+    mirror each checkpoint to ``shard<id>.ckpt.npz`` (crash-durable
+    variant; the in-memory copy stays authoritative for speed).
+    """
+
+    def __init__(self, directory: str | pathlib.Path | None = None):
+        self._lock = threading.Lock()
+        self._blobs: dict[int, bytes] = {}
+        self.n_saves = 0
+        self.directory = pathlib.Path(directory) if directory else None
+        if self.directory:
+            self.directory.mkdir(parents=True, exist_ok=True)
+
+    def save(self, ckpt: ShardCheckpoint) -> None:
+        raw = ckpt.to_bytes()
+        with self._lock:
+            self._blobs[ckpt.shard] = raw
+            self.n_saves += 1
+        if self.directory:
+            path = self.directory / f"shard{ckpt.shard:05d}.ckpt.npz"
+            tmp = path.with_suffix(".tmp")
+            tmp.write_bytes(raw)
+            tmp.replace(path)  # atomic: a torn write never shadows a good one
+
+    def load(self, shard: int) -> ShardCheckpoint | None:
+        with self._lock:
+            raw = self._blobs.get(shard)
+        if raw is None and self.directory:
+            path = self.directory / f"shard{shard:05d}.ckpt.npz"
+            if path.exists():
+                raw = path.read_bytes()
+        return None if raw is None else ShardCheckpoint.from_bytes(raw)
+
+    def discard(self, shard: int) -> None:
+        with self._lock:
+            self._blobs.pop(shard, None)
+        if self.directory:
+            path = self.directory / f"shard{shard:05d}.ckpt.npz"
+            if path.exists():
+                path.unlink()
+
+    def __contains__(self, shard: int) -> bool:
+        with self._lock:
+            if shard in self._blobs:
+                return True
+        return bool(
+            self.directory
+            and (self.directory / f"shard{shard:05d}.ckpt.npz").exists()
+        )

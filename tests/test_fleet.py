@@ -1,0 +1,329 @@
+"""Spot-fleet robustness: round-grain checkpoint/resume, preemption
+injection, re-queue + retry, and recall parity under injected failures
+(paper §II-B notice windows, §IV task re-allocation)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import IndexConfig
+from repro.core import builder
+from repro.core.builder import ShardBuildError, build_scalegann
+from repro.core.scheduler import RuntimeModel
+from repro.core.vamana import build_shard_index_vamana
+from repro.data.synthetic import make_clustered, recall_at
+from repro.fleet import (CheckpointStore, CostGreedyPolicy, DeadlinePolicy,
+                         Preempted, PreemptionInjector, ShardCheckpoint,
+                         build_scalegann_fleet)
+
+CFG = IndexConfig(n_clusters=4, degree=8, build_degree=16, block_size=512)
+RM = RuntimeModel(seconds_per_vector=1e-4)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered(1500, 24, n_queries=24, seed=2)
+
+
+@pytest.fixture(scope="module")
+def small():
+    return make_clustered(600, 16, n_queries=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def plain_build(ds):
+    """The uninterrupted baseline every preempted build must match."""
+    return build_scalegann(ds.data, CFG, algo="vamana")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint serialization
+# ---------------------------------------------------------------------------
+
+
+def _mk_ckpt(shard=3, n=40, R=8):
+    rng = np.random.default_rng(0)
+    graph = rng.integers(-1, n, size=(n, R)).astype(np.int64)
+    return ShardCheckpoint(
+        shard=shard, pass_idx=1, next_start=256, graph=graph,
+        n_distance_computations=12345, n=n, R=R, seed=7, batch_size=128,
+        round_idx=5, n_rounds_total=8,
+    )
+
+
+def test_checkpoint_bytes_roundtrip_identity():
+    ck = _mk_ckpt()
+    back = ShardCheckpoint.from_bytes(ck.to_bytes())
+    assert np.array_equal(back.graph, ck.graph)
+    assert back.graph.dtype == np.int64
+    for f in ("shard", "pass_idx", "next_start", "n_distance_computations",
+              "n", "R", "seed", "batch_size", "round_idx", "n_rounds_total"):
+        assert getattr(back, f) == getattr(ck, f), f
+
+
+def test_checkpoint_store_memory_and_disk(tmp_path):
+    store = CheckpointStore(tmp_path)
+    ck = _mk_ckpt(shard=2)
+    store.save(ck)
+    assert 2 in store and 9 not in store
+    # a *fresh* store over the same directory recovers it (crash survival)
+    back = CheckpointStore(tmp_path).load(2)
+    assert back is not None and np.array_equal(back.graph, ck.graph)
+    store.discard(2)
+    assert 2 not in store and CheckpointStore(tmp_path).load(2) is None
+
+
+# ---------------------------------------------------------------------------
+# round hook + bit-compatible resume
+# ---------------------------------------------------------------------------
+
+
+def test_round_hook_fires_every_round(small):
+    states = []
+    build_shard_index_vamana(small.data, CFG, backend="numpy",
+                             batch_size=64, round_hook=states.append)
+    per_pass = -(-len(small.data) // 64)
+    assert len(states) == 2 * per_pass
+    assert [s.round_idx for s in states] == list(range(1, len(states) + 1))
+    assert states[-1].pass_idx == 1
+    assert all(s.n == len(small.data) and s.R == 8 for s in states)
+    # the snapshot is a copy, not a view of the live graph
+    states[0].graph[:] = -7
+    assert not np.array_equal(states[0].graph, states[-1].graph)
+
+
+@pytest.mark.parametrize("kill_round", [2, 7, 12])
+def test_resume_is_bit_compatible(small, kill_round):
+    """Kill mid-build at a round boundary, resume from the snapshot:
+    final graph and distance counter are identical to an uninterrupted
+    build — across batch, pass, and near-end boundaries."""
+    ref = build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                   batch_size=64)
+    states = []
+
+    class Kill(Exception):
+        pass
+
+    def hook(st):
+        states.append(st)
+        if st.round_idx == kill_round:
+            raise Kill
+
+    with pytest.raises(Kill):
+        build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                 batch_size=64, round_hook=hook)
+    res = build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                   batch_size=64, resume=states[-1])
+    assert np.array_equal(res.graph, ref.graph)
+    assert res.n_distance_computations == ref.n_distance_computations
+
+
+def test_resume_through_serialized_checkpoint(small):
+    """The full persistence path: snapshot → ShardCheckpoint → bytes →
+    deserialize → resume — still bit-identical."""
+    ref = build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                   batch_size=64)
+    states = []
+
+    class Kill(Exception):
+        pass
+
+    def hook(st):
+        states.append(st)
+        if st.round_idx == 5:
+            raise Kill
+
+    with pytest.raises(Kill):
+        build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                 batch_size=64, round_hook=hook)
+    st = states[-1]
+    ck = ShardCheckpoint(
+        shard=0, pass_idx=st.pass_idx, next_start=st.next_start,
+        graph=st.graph, n_distance_computations=st.n_distance_computations,
+        n=st.n, R=st.R, seed=0, batch_size=64, round_idx=st.round_idx,
+        n_rounds_total=st.n_rounds_total,
+    )
+    back = ShardCheckpoint.from_bytes(ck.to_bytes())
+    res = build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                   batch_size=64, resume=back)
+    assert np.array_equal(res.graph, ref.graph)
+
+
+def test_resume_shape_mismatch_raises(small):
+    ck = _mk_ckpt(n=40, R=8)
+    with pytest.raises(ValueError, match="mismatch"):
+        build_shard_index_vamana(small.data, CFG, backend="numpy",
+                                 batch_size=64, resume=ck)
+
+
+# ---------------------------------------------------------------------------
+# preemption injector
+# ---------------------------------------------------------------------------
+
+
+def test_injector_seeded_lifetimes_deterministic():
+    a = PreemptionInjector(seed=7, mean_lifetime_rounds=6.0)
+    b = PreemptionInjector(seed=7, mean_lifetime_rounds=6.0)
+    c = PreemptionInjector(seed=8, mean_lifetime_rounds=6.0)
+    for w in range(4):
+        a.start_instance(w)
+        b.start_instance(w)
+        c.start_instance(w)
+    la = [a.lifetime_rounds(w) for w in range(4)]
+    assert la == [b.lifetime_rounds(w) for w in range(4)]
+    assert la != [c.lifetime_rounds(w) for w in range(4)]
+    # incarnations differ too (a replacement is a new instance)
+    a.start_instance(0)
+    b.start_instance(0)
+    assert a.lifetime_rounds(0) == b.lifetime_rounds(0) != la[0]
+
+
+def test_injector_notice_precedes_kill():
+    inj = PreemptionInjector(seed=0, mean_lifetime_rounds=10.0,
+                             notice_rounds=2)
+    inj.start_instance(0)
+    life = inj.lifetime_rounds(0)
+    assert life > 3  # seeded draw; fixture guards the scenario below
+    sigs = []
+    r = 0
+    while not sigs or sigs[-1] != "kill":
+        r += 1
+        sigs.append(inj.observe_round(0, 0, 0, r))
+    # the window: rounds with remaining lifetime <= notice_rounds warn
+    kill_at = len(sigs)
+    assert sigs[kill_at - 2] == "notice"
+    assert all(s is None for s in sigs[: kill_at - 3])
+    assert inj.known_remaining_rounds(0) is not None  # notice fired
+
+
+def test_injector_explicit_kill_once_per_shard():
+    inj = PreemptionInjector(kill_shard_at={4: 3})
+    inj.start_instance(0)
+    assert inj.observe_round(0, 4, 0, 2) is None
+    assert inj.observe_round(0, 4, 0, 3) == "kill"
+    # second attempt (resume) sails through the same round
+    assert inj.observe_round(0, 4, 1, 3) is None
+    assert inj.observe_round(0, 4, 0, 3) is None  # and never re-kills
+
+
+# ---------------------------------------------------------------------------
+# fleet executor end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_kill_midshard_resumes_to_identical_index(ds, plain_build):
+    """The acceptance scenario: a kill mid-shard, checkpoint/resume +
+    re-queue, and the finished index matches the uninterrupted build —
+    graphs bit-identical, recall@10 within 0.01 (here: equal)."""
+    inj = PreemptionInjector(kill_shard_at={0: 2})
+    out = build_scalegann_fleet(
+        ds.data, CFG, n_workers=1, injector=inj, runtime_model=RM,
+    )
+    r = out.report
+    assert r.n_preemptions >= 1
+    assert r.n_resumes >= 1
+    assert r.n_requeues >= 1
+    assert r.shard_attempts[0] >= 2
+    for got, want in zip(out.build.shard_graphs, plain_build.shard_graphs):
+        assert np.array_equal(got, want)
+    ids, _ = out.build.search(ds.data, ds.queries, 10, backend="jax",
+                              width=64)
+    pids, _ = plain_build.search(ds.data, ds.queries, 10, backend="jax",
+                                 width=64)
+    got = recall_at(ids, ds.gt, 10)
+    want = recall_at(pids, ds.gt, 10)
+    assert abs(got - want) <= 0.01
+
+
+def test_fleet_survives_preemption_storm(ds, plain_build):
+    """Aggressive seeded lifetimes: many kills + notices + replacement
+    instances, and the build still completes at recall parity."""
+    inj = PreemptionInjector(seed=3, mean_lifetime_rounds=3.0,
+                             notice_rounds=1)
+    out = build_scalegann_fleet(
+        ds.data, CFG, n_workers=2, injector=inj, runtime_model=RM,
+        batch_size=128,
+    )
+    r = out.report
+    assert r.n_preemptions >= 2
+    assert r.rounds_lost >= 1  # notice-less kills really lose work
+    ids, _ = out.build.search(ds.data, ds.queries, 10, backend="jax",
+                              width=64)
+    pids, _ = plain_build.search(ds.data, ds.queries, 10, backend="jax",
+                                 width=64)
+    assert recall_at(ids, ds.gt, 10) >= recall_at(pids, ds.gt, 10) - 0.01
+    assert r.cost.total > 0
+
+
+def test_fleet_restart_from_zero_when_killed_before_first_checkpoint(ds):
+    """checkpoint_every_rounds > kill round → no checkpoint exists yet;
+    the task restarts from scratch instead of resuming."""
+    inj = PreemptionInjector(kill_shard_at={1: 1})
+    out = build_scalegann_fleet(
+        ds.data, CFG, n_workers=1, injector=inj, runtime_model=RM,
+        checkpoint_every_rounds=100,
+    )
+    r = out.report
+    assert r.n_preemptions == 1
+    assert r.n_resumes == 0  # nothing to resume from
+    assert r.rounds_lost >= 1
+    assert all(g is not None for g in out.build.shard_graphs)
+
+
+def test_fleet_policies_share_the_scheduler_objects(ds):
+    """Both policies drive the same executor; EDD orders by deadline and
+    both finish with a full index."""
+    for policy in (CostGreedyPolicy(), DeadlinePolicy()):
+        out = build_scalegann_fleet(
+            ds.data, CFG, n_workers=2, runtime_model=RM, policy=policy,
+        )
+        assert out.report.policy == policy.name
+        assert out.report.n_preemptions == 0
+        assert len(out.build.shard_graphs) == out.report.n_shards
+
+
+def test_fleet_rejects_non_round_grain_algo(ds):
+    with pytest.raises(ValueError, match="not supported"):
+        build_scalegann_fleet(ds.data, CFG, algo="cagra", runtime_model=RM)
+
+
+# ---------------------------------------------------------------------------
+# build_scalegann retry path (the non-fleet thread pool)
+# ---------------------------------------------------------------------------
+
+
+def _flaky(fail_times: int):
+    """Wrap the real vamana builder: every shard's first `fail_times`
+    attempts raise, later attempts succeed."""
+    calls = {}
+
+    def build(vecs, cfg, **kw):
+        key = len(vecs)
+        calls[key] = calls.get(key, 0) + 1
+        if calls[key] <= fail_times:
+            raise OSError(f"transient failure #{calls[key]}")
+        return build_shard_index_vamana(vecs, cfg, **kw)
+
+    return build
+
+
+def test_build_scalegann_retries_transient_failures(ds, monkeypatch):
+    monkeypatch.setitem(builder.BUILDERS, "vamana", _flaky(1))
+    res = build_scalegann(ds.data, CFG, algo="vamana",
+                          retry_backoff_s=0.001)
+    assert res.shard_attempts is not None
+    assert max(res.shard_attempts) >= 2
+    assert any(e and "transient failure" in e for e in res.shard_errors)
+    assert all(g is not None for g in res.shard_graphs)
+
+
+def test_build_scalegann_surfaces_exhausted_shard(ds, monkeypatch):
+    def always_fail(vecs, cfg, **kw):
+        raise OSError("persistent failure")
+
+    monkeypatch.setitem(builder.BUILDERS, "vamana", always_fail)
+    with pytest.raises(ShardBuildError, match="persistent failure") as ei:
+        build_scalegann(ds.data, CFG, algo="vamana", max_retries=1,
+                        retry_backoff_s=0.001)
+    assert ei.value.errors and all(
+        a == 2 for a in ei.value.attempts.values()
+    )
