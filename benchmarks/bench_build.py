@@ -56,6 +56,8 @@ from repro.core import builder
 from repro.data.synthetic import (exact_ground_truth, make_clustered,
                                   recall_at)
 from repro.search import search
+from repro.telemetry import (NULL_TRACER, Tracer, set_tracer,
+                             validate_chrome_trace)
 
 N_VECTORS = 2000
 DIM = 32
@@ -182,7 +184,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--scale", choices=["ci", "large"], default="ci",
                     help="'large' additionally runs the 10^5 memmapped "
                          "fixture (local-only profile)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the builds "
+                         "(partition/shard/merge phases, per-round vamana "
+                         "spans)")
     args = ap.parse_args(argv)
+    tracer = None
+    if args.trace_out:
+        # default perf_counter clock matches the builder's own stopwatch
+        tracer = Tracer(process="bench_build")
+        set_tracer(tracer)
     n_queries = 64 if args.smoke else N_QUERIES
 
     ds = make_clustered(N_VECTORS, DIM, n_queries=n_queries, spread=1.0,
@@ -216,6 +227,14 @@ def main(argv=None) -> dict:
 
     if args.scale == "large":
         results["large"] = bench_large()
+
+    if tracer is not None:
+        set_tracer(NULL_TRACER)
+        n_schema = len(validate_chrome_trace(tracer.to_chrome()))
+        tracer.write(args.trace_out)
+        results["trace"] = {"path": str(args.trace_out),
+                            "schema_errors": n_schema}
+        print(f"trace: {args.trace_out} (schema errors {n_schema})")
 
     OUT_PATH.write_text(json.dumps(results, indent=2, sort_keys=True))
     print(f"wrote {OUT_PATH}")

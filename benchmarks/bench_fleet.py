@@ -48,6 +48,8 @@ from repro.core.scheduler import (V100_ONDEMAND, V100_SPOT, DeadlinePolicy,
 from repro.data.synthetic import make_clustered, recall_at
 from repro.fleet import (SCHEDULING_POLICIES, CheckpointStore,
                          PreemptionInjector, build_scalegann_fleet)
+from repro.telemetry import (NULL_TRACER, Tracer, check_fleet_trace,
+                             set_tracer, validate_chrome_trace)
 
 N_VECTORS = 2000
 DIM = 32
@@ -154,7 +156,13 @@ def simulate_policy(model, sizes, *, spot: bool, policy_name: str,
     }
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, trace_out: str | None = None) -> dict:
+    tracer = None
+    if trace_out:
+        # installed process-wide so the executor's worker/shard tracks AND
+        # the per-round vamana spans land on one timeline
+        tracer = Tracer(process="bench_fleet")
+        set_tracer(tracer)
     n_queries = 32 if smoke else 128
     ds = make_clustered(N_VECTORS, DIM, n_queries=128, spread=1.0, seed=0)
     cfg = IndexConfig(n_clusters=4, degree=16, build_degree=32,
@@ -211,6 +219,22 @@ def main(smoke: bool = False) -> dict:
         and real["n_preemptions"] >= 1
         and real["n_resumes"] >= 1
     )
+    trace_block = None
+    if tracer is not None:
+        set_tracer(NULL_TRACER)
+        obj = tracer.to_chrome()
+        n_schema = len(validate_chrome_trace(obj))
+        chk = check_fleet_trace(obj)
+        tracer.write(trace_out)
+        trace_block = {
+            "path": str(trace_out),
+            "schema_errors": n_schema,
+            "preemption_lifecycle": chk,
+        }
+        print(f"trace: {trace_out} ({chk['n_attempt_spans']} attempt "
+              f"spans, {chk['n_kills']} kills, {chk['n_resumes']} resumes; "
+              f"lifecycle ok {chk['ok']}, schema errors {n_schema})")
+
     results = {
         "fixture": {"n": N_VECTORS, "dim": DIM, "n_queries": n_queries,
                     "smoke": smoke},
@@ -224,6 +248,8 @@ def main(smoke: bool = False) -> dict:
         "spot_over_ondemand_cost": best_spot / best_od,
         "claim.spot_cheaper_than_ondemand_at_recall_parity": claim,
     }
+    if trace_block is not None:
+        results["trace"] = trace_block
     OUT_PATH.write_text(json.dumps(results, indent=2, default=float))
     print(f"\nspot/on-demand cost = {best_spot / best_od:.2f}x "
           f"(${best_spot:.2f} vs ${best_od:.2f}), recall parity "
@@ -236,4 +262,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI profile: fewer queries, smaller simulation")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the fleet build "
+                         "(worker attempt spans, kill/backoff/resume)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, trace_out=args.trace_out)

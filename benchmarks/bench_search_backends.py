@@ -31,6 +31,8 @@ from repro.configs.base import IndexConfig
 from repro.core import builder
 from repro.data.synthetic import make_clustered, recall_at
 from repro.search import available_backends, search
+from repro.telemetry import (NULL_TRACER, Tracer, set_tracer,
+                             validate_chrome_trace)
 
 N_VECTORS = 2000
 N_QUERIES = 256
@@ -141,7 +143,15 @@ def main(argv=None) -> dict:
                          "suite, never alongside it)")
     ap.add_argument("--dtypes", default="f32,bf16,uint8",
                     help="comma-separated stage list for the dtype sweep")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace (search.engine "
+                         "spans per backend call, plus build phases for "
+                         "the fixture indexes)")
     args = ap.parse_args(argv)
+    tracer = None
+    if args.trace_out:
+        tracer = Tracer(process="bench_search_backends")
+        set_tracer(tracer)
     repeats = 1 if args.smoke else REPEATS
     n_queries = 128 if args.smoke else N_QUERIES
     dtypes = [d for d in args.dtypes.split(",") if d]
@@ -211,6 +221,14 @@ def main(argv=None) -> dict:
         print("uint8 bytes/distance cut: "
               + ", ".join(f"{p} {c:.2f}x" for p, c in cuts.items())
               + f" (claim {'holds' if ok else 'FAILS'})")
+
+    if tracer is not None:
+        set_tracer(NULL_TRACER)
+        n_schema = len(validate_chrome_trace(tracer.to_chrome()))
+        tracer.write(args.trace_out)
+        results["trace"] = {"path": str(args.trace_out),
+                            "schema_errors": n_schema}
+        print(f"trace: {args.trace_out} (schema errors {n_schema})")
 
     OUT_PATH.write_text(json.dumps(results, indent=2, sort_keys=True))
     print(f"wrote {OUT_PATH}")

@@ -48,6 +48,8 @@ from repro.data.synthetic import make_clustered
 from repro.search import search
 from repro.serving import (AnnServer, ServerOverloadedError, ServerStats,
                            ServingConfig)
+from repro.telemetry import (NULL_TRACER, Tracer, check_serving_trace,
+                             set_tracer, validate_chrome_trace)
 
 K = 10
 WIDTH = 64
@@ -123,13 +125,16 @@ async def run_trial(topo, ds, *, backend: str, rate_qps: float,
             srv, ds, n_requests, rate_qps, seed=2)
     snap = srv.stats.snapshot()
     lat = snap["latency_ms"]
+    pcts = ("p50", "p95", "p99", "mean")
     return {
         "offered_qps": rate_qps,
         "max_wait_ms": max_wait_ms,
         "adaptive_window": adaptive,
         "qps": snap["qps"],
         "recall_at_10": _recall([(j, o.ids) for j, o in outs], ds.gt),
-        "latency_ms": {p: lat[p] for p in ("p50", "p95", "p99", "mean")},
+        "latency_ms": {p: lat[p] for p in pcts},
+        "queue_wait_ms": {p: snap["queue_wait_ms"][p] for p in pcts},
+        "engine_service_ms": {p: snap["engine_service_ms"][p] for p in pcts},
         "batch_occupancy": snap["batch_occupancy"],
         "distance_computations_per_query":
             snap["distance_computations_per_query"],
@@ -140,7 +145,14 @@ async def run_trial(topo, ds, *, backend: str, rate_qps: float,
     }
 
 
-def main(smoke: bool = False) -> dict:
+def main(smoke: bool = False, trace_out: str | None = None) -> dict:
+    tracer = None
+    if trace_out:
+        # the tracer's clock MUST match AnnServer's (time.monotonic):
+        # per-request lane timestamps are server-clock readings emitted
+        # into the tracer's time base verbatim
+        tracer = Tracer(clock=time.monotonic, process="bench_serving")
+        set_tracer(tracer)
     n_queries = 256
     ds = make_clustered(N_VECTORS, DIM, n_queries=n_queries, spread=1.0,
                         seed=7)
@@ -202,6 +214,8 @@ def main(smoke: bool = False) -> dict:
             results["server"][backend][label] = row
             print(f"serve  {backend:6s} {label:32s} "
                   f"qps={row['qps']:7.0f} p95={row['latency_ms']['p95']:7.1f}ms "
+                  f"(queue {row['queue_wait_ms']['p95']:6.1f} / "
+                  f"engine {row['engine_service_ms']['p95']:6.1f}) "
                   f"occ={row['batch_occupancy']['mean']:5.1f} "
                   f"recall@10={row['recall_at_10']:.3f}")
 
@@ -252,6 +266,21 @@ def main(smoke: bool = False) -> dict:
           f"(server recall {best['recall_at_10']:.3f} vs "
           f"batch1 {b1['recall_at_10']:.3f})")
 
+    if tracer is not None:
+        set_tracer(NULL_TRACER)
+        obj = tracer.to_chrome()
+        n_schema = len(validate_chrome_trace(obj))
+        chk = check_serving_trace(obj)
+        tracer.write(trace_out)
+        results["trace"] = {
+            "path": str(trace_out),
+            "schema_errors": n_schema,
+            "request_decomposition": chk,
+        }
+        print(f"trace: {trace_out} ({chk['n_requests']} request lanes, "
+              f"min phase coverage {chk['min_coverage_seen']:.3f}, "
+              f"schema errors {n_schema})")
+
     OUT_PATH.write_text(json.dumps(results, indent=2, sort_keys=True))
     print(f"wrote {OUT_PATH}")
     return results
@@ -262,4 +291,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: jax+pallas, one rate, short trials, "
                          "plus a tiny force-interpret fused-engine trial")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of every served "
+                         "request (async lanes: queue/batch/engine/rerank)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, trace_out=args.trace_out)

@@ -58,6 +58,27 @@ def main():
           f"+ shards {rep.fleet_wall_s:.2f}s + merge {rep.merge_s:.2f}s), "
           f"accelerator-active {rep.accelerator_active_s:.2f}s")
 
+    # --- per-shard event timelines (the telemetry satellite view) --------
+    print("per-shard timelines (attempts, rounds, checkpoints, lifecycle):")
+    for tl in rep.shard_timelines:
+        # checkpoint events are dense (one per round) — compress them so
+        # the lifecycle (kill/preempted/resume) stays readable
+        steps, n_ckpt = [], 0
+        for _t, kind, _w, _s, detail in tl.events:
+            if kind == "checkpoint":
+                n_ckpt += 1
+                continue
+            if n_ckpt:
+                steps.append(f"ckpt x{n_ckpt}")
+                n_ckpt = 0
+            steps.append(f"{kind}({detail})")
+        if n_ckpt:
+            steps.append(f"ckpt x{n_ckpt}")
+        print(f"  shard {tl.shard}: {tl.attempts} attempt(s), "
+              f"{tl.rounds_completed} rounds, "
+              f"{tl.checkpoints_saved} checkpoint(s)")
+        print(f"    {' -> '.join(steps)}")
+
     # --- §VI-C cost model ------------------------------------------------
     cost = rep.cost
     print(f"cost at spot prices: ${cost.total:.4f} "

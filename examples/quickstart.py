@@ -4,7 +4,9 @@ Sections: 1–3 build, 4 query backends, 5 routed split serving, 6 the
 micro-batching server, 7 quantized distance stages (uint8/bf16 + f32
 re-rank), 8 vectorized vs seed-loop build timing, 9 the fused
 device-resident beam engine (backend="pallas"), 10 preemption-tolerant
-spot-fleet builds (checkpoint/resume through an injected kill).
+spot-fleet builds (checkpoint/resume through an injected kill), traced
+end-to-end with the telemetry subsystem (README §10 — open the written
+trace at https://ui.perfetto.dev).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -146,21 +148,30 @@ def main():
     #     every batched round, so a killed instance costs only the rounds
     #     since the last save — the task re-queues, resumes mid-build, and
     #     the finished index is bit-identical to an uninterrupted one.
-    #     Here we inject one kill on shard 0 at round 2 and watch it heal
+    #     Here we inject one kill on shard 0 at round 2 and watch it heal,
+    #     with a Tracer recording the whole run: worker attempt spans,
+    #     per-round vamana spans, the kill instant, the backoff window and
+    #     the resume all land on one Perfetto timeline
     #     (examples/build_spot_index.py runs the full workflow; the
     #     calibrated runtime model + policy/price comparison lives in
     #     benchmarks/bench_fleet.py -> BENCH_fleet.json).
+    import pathlib
+    import tempfile
+
     from repro.core.scheduler import RuntimeModel
     from repro.fleet import PreemptionInjector, build_scalegann_fleet
+    from repro.telemetry import Tracer, check_fleet_trace
 
     sub = ds.data[:2000]
     fcfg = IndexConfig(n_clusters=4, degree=16, build_degree=32,
                        block_size=1024)
+    tracer = Tracer(process="quickstart")
     fleet = build_scalegann_fleet(
         sub, fcfg, n_workers=2,
         injector=PreemptionInjector(kill_shard_at={0: 2}),
         runtime_model=RuntimeModel(seconds_per_vector=1e-4),  # skip
-    )                          # calibration here; bench_fleet.py fits it
+        tracer=tracer,         # calibration here; bench_fleet.py fits it
+    )
     rep = fleet.report
     plain = build_scalegann(sub, fcfg, algo="vamana")
     same = all(np.array_equal(a, b) for a, b in
@@ -169,6 +180,15 @@ def main():
           f"resume, {rep.rounds_lost} of {rep.rounds_completed} rounds "
           f"lost, graphs identical to uninterrupted build: {same}  "
           f"(${rep.cost.total:.4f} at spot prices)")
+    trace_path = pathlib.Path(tempfile.gettempdir()) / \
+        "quickstart_fleet_trace.json"
+    tracer.write(trace_path)
+    chk = check_fleet_trace(tracer.to_chrome())
+    rounds = rep.metrics["fleet_rounds_total"]["series"][0]["value"]
+    print(f"[trace]  {chk['n_attempt_spans']} attempt spans / "
+          f"{rounds:.0f} round spans across {chk['n_worker_tracks']} "
+          f"worker tracks; kill->backoff->resume on the timeline: "
+          f"{chk['ok']} — open {trace_path} at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

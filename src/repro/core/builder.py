@@ -48,6 +48,7 @@ from repro.configs.base import IndexConfig
 from repro.core import cagra, vamana
 from repro.core.merge import GlobalIndex, merge_shard_indexes
 from repro.core.partition import PartitionResult, Shard, partition
+from repro.telemetry import current_tracer
 
 BUILDERS = {
     "cagra": cagra.build_shard_index,
@@ -82,6 +83,43 @@ class BuildResult:
     @property
     def overall_s(self) -> float:
         return self.partition_s + self.wall_build_s + self.merge_s
+
+    def feed_metrics(self, registry=None):
+        """Feed this build's aggregates into a
+        :class:`~repro.telemetry.MetricsRegistry` (a fresh one by
+        default) and return it — the build result is the source of truth,
+        the registry is its exposition, so dashboards and the Prometheus
+        text format come for free instead of each bench re-deriving them.
+        Metrics are labeled by ``system`` so several compared builds can
+        share one registry."""
+        from repro.telemetry import MetricsRegistry
+
+        reg = registry if registry is not None else MetricsRegistry()
+        sys_ = self.name
+        reg.counter("build_shards_total", "shards built",
+                    system=sys_).inc(len(self.shards))
+        reg.counter("build_distance_computations_total",
+                    "distance computations spent building",
+                    system=sys_).inc(self.n_distance_computations)
+        if self.shard_attempts:
+            reg.counter("build_shard_attempts_total",
+                        "shard build attempts including retries",
+                        system=sys_).inc(sum(self.shard_attempts))
+        phase = "build_phase_seconds"
+        phelp = "wall seconds per build phase"
+        reg.gauge(phase, phelp, system=sys_,
+                  phase="partition").set(self.partition_s)
+        reg.gauge(phase, phelp, system=sys_,
+                  phase="shards").set(self.wall_build_s)
+        reg.gauge(phase, phelp, system=sys_,
+                  phase="merge").set(self.merge_s)
+        reg.gauge("build_overall_seconds", "partition + shards + merge",
+                  system=sys_).set(self.overall_s)
+        h = reg.histogram("build_shard_seconds",
+                          "per-shard build wall time", system=sys_)
+        for s in self.per_shard_s:
+            h.observe(s)
+        return reg
 
     def topology(self, data: np.ndarray, *, metric: str = "l2"):
         """The search topology this build serves: merged systems expose the
@@ -159,6 +197,8 @@ def _build_shards(
     last_error: list[str | None] = [None] * len(shards)
     failures: dict[int, BaseException] = {}
 
+    tr = current_tracer()
+
     def one(i: int):
         """One shard, with bounded retry + capped exponential backoff — a
         transient failure (OOM burst, flaky accelerator) must not abort the
@@ -170,7 +210,9 @@ def _build_shards(
         for attempt in range(max_retries + 1):
             attempts[i] = attempt + 1
             try:
-                results[i] = build(vecs, cfg)
+                with tr.span("build.shard", shard=i, algo=algo,
+                             n=len(shards[i].ids), attempt=attempt + 1):
+                    results[i] = build(vecs, cfg)
                 break
             except Exception as e:  # noqa: BLE001 — recorded + re-raised
                 last_error[i] = f"{type(e).__name__}: {e}"
@@ -181,12 +223,14 @@ def _build_shards(
         per_shard_s[i] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    if n_workers <= 1:
-        for i in range(len(shards)):
-            one(i)
-    else:
-        with ThreadPoolExecutor(max_workers=n_workers) as pool:
-            list(pool.map(one, range(len(shards))))
+    with tr.span("build.shards", track="build", n_shards=len(shards),
+                 n_workers=n_workers):
+        if n_workers <= 1:
+            for i in range(len(shards)):
+                one(i)
+        else:
+            with ThreadPoolExecutor(max_workers=n_workers) as pool:
+                list(pool.map(one, range(len(shards))))
     wall = time.perf_counter() - t0
     if failures:
         raise ShardBuildError(
@@ -218,8 +262,10 @@ def build_scalegann(
     errors land in ``BuildResult.shard_attempts`` / ``.shard_errors``, and
     a shard that exhausts its budget raises :class:`ShardBuildError`
     carrying every failed shard's error."""
+    tr = current_tracer()
     t0 = time.perf_counter()
-    part: PartitionResult = partition(data, cfg, selective=selective)
+    with tr.span("build.partition", track="build", n=len(data)):
+        part: PartitionResult = partition(data, cfg, selective=selective)
     partition_s = time.perf_counter() - t0
 
     idxs, per_shard_s, wall, attempts, errors = _build_shards(
@@ -229,10 +275,11 @@ def build_scalegann(
     )
 
     t0 = time.perf_counter()
-    merged = merge_shard_indexes(
-        part.shards, idxs, len(data), cfg.degree, data=data,
-        reference=reference,
-    )
+    with tr.span("build.merge", track="build", n_shards=len(part.shards)):
+        merged = merge_shard_indexes(
+            part.shards, idxs, len(data), cfg.degree, data=data,
+            reference=reference,
+        )
     merge_s = time.perf_counter() - t0
     return BuildResult(
         name=f"scalegann[{algo}]",

@@ -386,12 +386,17 @@ def build_shard_index_vamana(
             start_off = 0
 
     from repro.search import beam_pool  # deferred: keeps core import-light
+    from repro.telemetry import current_tracer
 
+    tr = current_tracer()  # no-op tracer: one branch per round, no clocks
     for pi, a in enumerate((1.0, alpha)):  # two passes per the paper
         if pi < start_pass:
             continue
         s0 = start_off if pi == start_pass else 0
         for s in range(s0, n, nb):
+            if tr.enabled:
+                t_round0 = tr.now()
+                dc0 = counter[0]
             batch = order[s : s + nb]
             m = len(batch)
             rows = np.resize(batch, nb)  # cycle real points: stable shapes
@@ -415,9 +420,20 @@ def build_shard_index_vamana(
             _apply_reverse_edges(
                 batch, pruned, graph, data, a, R, counter
             )
+            ridx = pi * rounds_per_pass + (s // nb) + 1
+            if tr.enabled:
+                # emitted before the hook: a hook-raised preemption must
+                # not erase a round that did complete (its track — hence
+                # its nesting under the fleet attempt span — comes from
+                # the enclosing span stack on this thread)
+                tr.complete(
+                    "vamana.round", t_round0, tr.now(), round=ridx,
+                    of=n_rounds_total, pass_idx=pi,
+                    dist=counter[0] - dc0, hops=int(p_stats.n_hops),
+                )
             if round_hook is not None:
                 round_hook(VamanaRoundState(
-                    round_idx=pi * rounds_per_pass + (s // nb) + 1,
+                    round_idx=ridx,
                     n_rounds_total=n_rounds_total,
                     pass_idx=pi,
                     next_start=s + nb,

@@ -29,6 +29,7 @@ from repro.fleet.checkpoint import CheckpointStore, ShardCheckpoint  # noqa: F40
 from repro.fleet.executor import (  # noqa: F401
     FleetBuildResult,
     FleetReport,
+    ShardTimeline,
     build_scalegann_fleet,
 )
 from repro.fleet.injector import Preempted, PreemptionInjector  # noqa: F401

@@ -50,6 +50,22 @@ from repro.core.scheduler import (CPU_MACHINE, V100_SPOT, CostGreedyPolicy,
 from repro.core.vamana import DEFAULT_BUILD_BATCH, build_shard_index_vamana
 from repro.fleet.checkpoint import CheckpointStore, ShardCheckpoint
 from repro.fleet.injector import Preempted, PreemptionInjector
+from repro.telemetry import MetricsRegistry, current_tracer
+
+
+@dataclasses.dataclass
+class ShardTimeline:
+    """One shard's life through the fleet, in fleet-relative seconds —
+    every attempt start, checkpoint save, kill/notice, resume and finish
+    that touched it, plus the aggregate round/checkpoint counts.  This is
+    the per-shard cut of ``FleetReport.events`` (same tuples), so a
+    postmortem of one stuck shard doesn't grep the whole fleet log."""
+
+    shard: int
+    attempts: int
+    rounds_completed: int
+    checkpoints_saved: int
+    events: list[tuple]  # (t_s, kind, worker, shard, detail), time order
 
 
 @dataclasses.dataclass
@@ -75,6 +91,11 @@ class FleetReport:
     cost: cost_model.CostBreakdown
     runtime_model: RuntimeModel
     events: list[tuple]  # (t_s, kind, worker, shard, detail)
+    shard_timelines: list[ShardTimeline] = dataclasses.field(
+        default_factory=list
+    )
+    metrics: dict = dataclasses.field(default_factory=dict)
+    # ^ the run's MetricsRegistry snapshot (fleet_* counters)
 
 
 @dataclasses.dataclass
@@ -123,6 +144,8 @@ def build_scalegann_fleet(
     deadline_slack: float = 3.0,
     accel_itype: InstanceType = V100_SPOT,
     cpu_itype: InstanceType = CPU_MACHINE,
+    tracer=None,
+    registry: MetricsRegistry | None = None,
 ) -> FleetBuildResult:
     """Partition → preemption-tolerant fleet shard builds → merge.
 
@@ -131,6 +154,18 @@ def build_scalegann_fleet(
     yet.  With ``injector=None`` this degrades to a plain (but retrying,
     policy-ordered) distributed build.  See the module docstring for the
     full lifecycle.
+
+    ``tracer`` (default: the process-wide :func:`current_tracer`) renders
+    the whole run on one timeline: each worker gets a track carrying its
+    ``fleet.shard_build`` attempt spans with kill/notice instants and
+    checkpoint/resume spans nested inside; backoff windows land on
+    per-shard tracks (a killed worker starts its next attempt immediately,
+    so the wait belongs to the *shard*, not the worker).  Per-round
+    ``vamana.round`` spans follow the process-global tracer — install
+    yours with :func:`repro.telemetry.use_tracer` to get them too.
+    ``registry`` collects the run's ``fleet_*`` counters (rounds,
+    checkpoints, preemptions, ...); it defaults to a *fresh* registry per
+    run so ``FleetReport.metrics`` is per-run, not process-cumulative.
     """
     if algo != "vamana":
         raise ValueError(
@@ -140,9 +175,25 @@ def build_scalegann_fleet(
     policy = policy or CostGreedyPolicy()
     store = checkpoint_store or CheckpointStore()
     nb = batch_size or DEFAULT_BUILD_BATCH
+    tr = current_tracer() if tracer is None else tracer
+    reg = MetricsRegistry() if registry is None else registry
+    c_rounds = reg.counter("fleet_rounds_total", "completed build rounds")
+    c_dist = reg.counter("fleet_distance_computations_total",
+                         "distance computations across shard builds")
+    c_ckpt = reg.counter("fleet_checkpoint_saves_total",
+                         "round-grain checkpoints persisted")
+    c_preempt = reg.counter("fleet_preemptions_total", "kill signals eaten")
+    c_resume = reg.counter("fleet_resumes_total", "checkpoint resumes")
+    c_notice = reg.counter("fleet_notices_total",
+                           "preemption notices observed")
+    c_requeue = reg.counter("fleet_requeues_total",
+                            "task requeues after preemption")
+    c_retry = reg.counter("fleet_error_retries_total",
+                          "task requeues after a build error")
 
     t_all = time.perf_counter()
-    part = partition(data, cfg, selective=selective)
+    with tr.span("fleet.partition", track="fleet"):
+        part = partition(data, cfg, selective=selective)
     partition_s = time.perf_counter() - t_all
 
     if runtime_model is None:
@@ -150,9 +201,10 @@ def build_scalegann_fleet(
         cal_sizes = tuple(
             s for s in (256, 512, 1024) if s <= max(256, len(data))
         )
-        runtime_model = calibrate_runtime(
-            None, data, cal_sizes, cfg=cfg, backend=backend, seed=seed
-        )
+        with tr.span("fleet.calibrate", track="fleet"):
+            runtime_model = calibrate_runtime(
+                None, data, cal_sizes, cfg=cfg, backend=backend, seed=seed
+            )
 
     shards = part.shards
     sizes = [len(s.ids) for s in shards]
@@ -181,6 +233,8 @@ def build_scalegann_fleet(
     counters = {
         "preempt": 0, "resume": 0, "rounds": 0, "rounds_lost": 0,
     }
+    rounds_by_shard = [0] * len(shards)
+    ckpts_by_shard = [0] * len(shards)
     events: list[tuple] = []
     t_fleet = time.perf_counter()
 
@@ -188,62 +242,111 @@ def build_scalegann_fleet(
         return time.perf_counter() - t_fleet
 
     def run_task(task: Task, worker: _Worker):
-        """One attempt of one shard on one worker — runs in the pool."""
-        ckpt = store.load(task.shard)  # crosses the serialize round-trip
-        if ckpt is not None:
-            if ckpt.seed != seed or ckpt.batch_size != nb:
-                raise ValueError(
-                    f"shard {task.shard} checkpoint was written with "
-                    f"seed={ckpt.seed} batch_size={ckpt.batch_size}; "
-                    f"resume requires the same (got {seed}/{nb})"
-                )
-            with lock:
-                counters["resume"] += 1
-            events.append((stamp(), "resume", worker.wid, task.shard,
-                           f"round {ckpt.round_idx}"))
-        last_saved = [ckpt.round_idx if ckpt else 0]
+        """One attempt of one shard on one worker — runs in the pool.
+
+        The attempt is one ``fleet.shard_build`` span on the worker's
+        track; resume/checkpoint spans and kill/notice instants nest
+        inside it (the per-round ``vamana.round`` spans inherit the track
+        from this thread's open span).
+        """
+        wtrack = f"worker-{worker.wid}"
         attempt_idx = task.attempts - 1  # set by the dispatcher pre-submit
-
-        def hook(state):
-            with lock:
-                counters["rounds"] += 1
-            sig = None
-            if injector is not None:
-                sig = injector.observe_round(
-                    worker.wid, task.shard, attempt_idx, state.round_idx
-                )
-            if sig == "kill":
-                # the instance is gone mid-window — no time to persist
-                # this round; resume replays from the last saved
-                # checkpoint (rounds_lost accounts the replay)
-                raise Preempted(
-                    store.load(task.shard), worker=worker.wid,
-                    shard=task.shard,
-                    lost_rounds=state.round_idx - last_saved[0],
-                )
-            due = (state.round_idx - last_saved[0]
-                   >= checkpoint_every_rounds)
-            if due or sig == "notice":  # §II-B: the notice window is for
-                ck = ShardCheckpoint(   # exactly this — checkpoint now
-                    shard=task.shard, pass_idx=state.pass_idx,
-                    next_start=state.next_start, graph=state.graph,
-                    n_distance_computations=state.n_distance_computations,
-                    n=state.n, R=state.R, seed=seed, batch_size=nb,
-                    round_idx=state.round_idx,
-                    n_rounds_total=state.n_rounds_total,
-                )
-                store.save(ck)
-                last_saved[0] = state.round_idx
-            if sig == "notice":
+        with tr.span("fleet.shard_build", track=wtrack,
+                     shard=task.shard, attempt=task.attempts):
+            t_load0 = tr.now()
+            ckpt = store.load(task.shard)  # crosses the serialize roundtrip
+            if ckpt is not None:
+                if ckpt.seed != seed or ckpt.batch_size != nb:
+                    raise ValueError(
+                        f"shard {task.shard} checkpoint was written with "
+                        f"seed={ckpt.seed} batch_size={ckpt.batch_size}; "
+                        f"resume requires the same (got {seed}/{nb})"
+                    )
                 with lock:
-                    worker.known_remaining_rounds = \
-                        injector.known_remaining_rounds(worker.wid)
+                    counters["resume"] += 1
+                c_resume.inc()
+                events.append((stamp(), "resume", worker.wid, task.shard,
+                               f"round {ckpt.round_idx}"))
+                if tr.enabled:
+                    tr.complete("fleet.resume", t_load0, tr.now(),
+                                track=wtrack, shard=task.shard,
+                                round=ckpt.round_idx)
+            last_saved = [ckpt.round_idx if ckpt else 0]
+            prev_dc = [int(ckpt.n_distance_computations) if ckpt else 0]
 
-        vecs = np.asarray(data[shards[task.shard].ids])
-        return build_shard_index_vamana(
-            vecs, cfg, seed=seed, backend=backend, batch_size=batch_size,
-            pad_to=pad, round_hook=hook, resume=ckpt,
-        )
+            def hook(state):
+                with lock:
+                    counters["rounds"] += 1
+                    rounds_by_shard[task.shard] += 1
+                c_rounds.inc()
+                c_dist.inc(
+                    max(state.n_distance_computations - prev_dc[0], 0)
+                )
+                prev_dc[0] = state.n_distance_computations
+                sig = None
+                if injector is not None:
+                    sig = injector.observe_round(
+                        worker.wid, task.shard, attempt_idx, state.round_idx
+                    )
+                if sig == "kill":
+                    # the instance is gone mid-window — no time to persist
+                    # this round; resume replays from the last saved
+                    # checkpoint (rounds_lost accounts the replay)
+                    events.append((stamp(), "kill", worker.wid, task.shard,
+                                   f"round {state.round_idx}"))
+                    if tr.enabled:
+                        tr.instant("fleet.preempt.kill", track=wtrack,
+                                   shard=task.shard, round=state.round_idx)
+                    raise Preempted(
+                        store.load(task.shard), worker=worker.wid,
+                        shard=task.shard,
+                        lost_rounds=state.round_idx - last_saved[0],
+                    )
+                due = (state.round_idx - last_saved[0]
+                       >= checkpoint_every_rounds)
+                if due or sig == "notice":  # §II-B: the notice window is
+                    t_ck0 = tr.now()        # for exactly this — ckpt now
+                    ck = ShardCheckpoint(
+                        shard=task.shard, pass_idx=state.pass_idx,
+                        next_start=state.next_start, graph=state.graph,
+                        n_distance_computations=(
+                            state.n_distance_computations
+                        ),
+                        n=state.n, R=state.R, seed=seed, batch_size=nb,
+                        round_idx=state.round_idx,
+                        n_rounds_total=state.n_rounds_total,
+                    )
+                    store.save(ck)
+                    last_saved[0] = state.round_idx
+                    c_ckpt.inc()
+                    with lock:
+                        ckpts_by_shard[task.shard] += 1
+                    events.append((stamp(), "checkpoint", worker.wid,
+                                   task.shard,
+                                   f"round {state.round_idx}"))
+                    if tr.enabled:
+                        tr.complete("fleet.checkpoint", t_ck0, tr.now(),
+                                    track=wtrack, shard=task.shard,
+                                    round=state.round_idx)
+                if sig == "notice":
+                    c_notice.inc()
+                    events.append((stamp(), "notice", worker.wid,
+                                   task.shard,
+                                   f"round {state.round_idx}"))
+                    if tr.enabled:
+                        tr.instant("fleet.preempt.notice", track=wtrack,
+                                   shard=task.shard,
+                                   round=state.round_idx)
+                    with lock:
+                        worker.known_remaining_rounds = \
+                            injector.known_remaining_rounds(worker.wid)
+
+            vecs = np.asarray(data[shards[task.shard].ids])
+            return build_shard_index_vamana(
+                vecs, cfg, seed=seed, backend=backend,
+                batch_size=batch_size, pad_to=pad, round_hook=hook,
+                resume=ckpt,
+            )
 
     # --- dispatch loop: availability + time-based admission, policy order
     pending: list[tuple] = []
@@ -256,7 +359,9 @@ def build_scalegann_fleet(
     running: dict = {}  # future -> (task, worker, t_started)
     n_done = 0
 
-    with ThreadPoolExecutor(max_workers=n_workers) as pool:
+    dispatch_span = tr.span("fleet.dispatch", track="fleet",
+                            n_workers=n_workers, n_shards=len(shards))
+    with dispatch_span, ThreadPoolExecutor(max_workers=n_workers) as pool:
         while n_done < len(shards):
             now = stamp()
             # dispatch as many pending tasks as admission allows
@@ -315,6 +420,8 @@ def build_scalegann_fleet(
                 except Preempted as p:
                     counters["preempt"] += 1
                     counters["rounds_lost"] += max(0, p.lost_rounds)
+                    c_preempt.inc()
+                    c_requeue.inc()
                     requeues[task.tid] += 1
                     if requeues[task.tid] > max_requeues:
                         raise RuntimeError(
@@ -332,6 +439,16 @@ def build_scalegann_fleet(
                     )
                     events.append((stamp(), "preempted", w, task.shard,
                                    f"requeue in {delay * 1e3:.0f}ms"))
+                    if tr.enabled:
+                        # the wait belongs to the *shard*: the worker that
+                        # ate the kill picks up new work immediately, so a
+                        # worker-track span here would overlap its next
+                        # attempt
+                        tn = tr.now()
+                        tr.complete("fleet.backoff", tn, tn + delay,
+                                    track=f"shard-{task.shard}",
+                                    shard=task.shard, reason="preempted",
+                                    requeue=requeues[task.tid])
                     # replacement instance for the lost one
                     if injector is not None:
                         injector.start_instance(w)
@@ -340,6 +457,7 @@ def build_scalegann_fleet(
                     free.append(w)
                 except Exception as e:  # noqa: BLE001 — bounded retry
                     errors[task.shard] = f"{type(e).__name__}: {e}"
+                    c_retry.inc()
                     err_retries[task.tid] += 1
                     if err_retries[task.tid] > max_error_retries:
                         raise ShardBuildError(
@@ -358,6 +476,12 @@ def build_scalegann_fleet(
                     )
                     events.append((stamp(), "error", w, task.shard,
                                    errors[task.shard]))
+                    if tr.enabled:
+                        tn = tr.now()
+                        tr.complete("fleet.backoff", tn, tn + delay,
+                                    track=f"shard-{task.shard}",
+                                    shard=task.shard, reason="error",
+                                    requeue=err_retries[task.tid])
                     free.append(w)
                 else:
                     results[task.shard] = idx
@@ -370,9 +494,10 @@ def build_scalegann_fleet(
     fleet_wall_s = time.perf_counter() - t_fleet
 
     t0 = time.perf_counter()
-    merged = merge_shard_indexes(
-        shards, results, len(data), cfg.degree, data=data
-    )
+    with tr.span("fleet.merge", track="fleet"):
+        merged = merge_shard_indexes(
+            shards, results, len(data), cfg.degree, data=data
+        )
     merge_s = time.perf_counter() - t0
     makespan_s = time.perf_counter() - t_all
 
@@ -418,5 +543,16 @@ def build_scalegann_fleet(
         ),
         runtime_model=runtime_model,
         events=events,
+        shard_timelines=[
+            ShardTimeline(
+                shard=s, attempts=attempts[s],
+                rounds_completed=rounds_by_shard[s],
+                checkpoints_saved=ckpts_by_shard[s],
+                events=sorted((e for e in events if e[3] == s),
+                              key=lambda e: e[0]),
+            )
+            for s in range(len(shards))
+        ],
+        metrics=reg.snapshot(),
     )
     return FleetBuildResult(build=build, report=report)

@@ -214,15 +214,24 @@ def search(
         topo = dataclasses.replace(topo, metric=metric)
     impl = get_backend(backend)
     queries = np.asarray(queries, np.float32)
-    if isinstance(topo, MergedTopology):
-        ids, stats = impl.search_merged(
-            topo, queries, k, width=width, n_entries=n_entries,
-            dtype=dtype, rerank=rerank,
-        )
+    from repro.telemetry import current_tracer
+
+    tr = current_tracer()
+    if tr.enabled:  # the gate keeps the untraced path allocation-free
+        span = tr.span("search.engine", backend=backend,
+                       n_queries=len(queries), k=k, dtype=dtype)
     else:
-        ids, stats = impl.search_split(
-            topo, queries, k, width=width, n_entries=n_entries,
-            nprobe=nprobe, dtype=dtype, rerank=rerank,
-        )
+        span = tr.span()  # the shared no-op span
+    with span:
+        if isinstance(topo, MergedTopology):
+            ids, stats = impl.search_merged(
+                topo, queries, k, width=width, n_entries=n_entries,
+                dtype=dtype, rerank=rerank,
+            )
+        else:
+            ids, stats = impl.search_split(
+                topo, queries, k, width=width, n_entries=n_entries,
+                nprobe=nprobe, dtype=dtype, rerank=rerank,
+            )
     stats.n_queries = len(queries)
     return ids, stats

@@ -21,12 +21,28 @@ of the old ``core.search`` module.
 from __future__ import annotations
 
 import dataclasses
+import time
 import typing
 
 import numpy as np
 
+from repro.telemetry import record_stage, stage_active
+
 if typing.TYPE_CHECKING:  # import-time independence from repro.core
     from repro.core.merge import GlobalIndex
+
+
+def _rerank_exact_timed(ops, data, cand, queries, k, metric):
+    """The shared exact-f32 epilogue, reporting its wall time to any
+    enclosing :func:`repro.telemetry.collect_stages` block (the serving
+    worker splits engine vs re-rank time per request from it).  With no
+    collector active this is a plain call — not even a clock read."""
+    if not stage_active():
+        return ops.rerank_exact(data, cand, queries, k, metric)
+    t0 = time.perf_counter()
+    out = ops.rerank_exact(data, cand, queries, k, metric)
+    record_stage("search.rerank", time.perf_counter() - t0)
+    return out
 
 
 @dataclasses.dataclass
@@ -402,8 +418,9 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
         width=width, n_iters=n_iters, metric=topo.metric,
         quant=spec if spec is not None else dtype,
     )
-    ids, _, n_scored = ops.rerank_exact(
-        topo.data, cand, np.asarray(queries, np.float32), k, topo.metric
+    ids, _, n_scored = _rerank_exact_timed(
+        ops, topo.data, cand, np.asarray(queries, np.float32), k,
+        topo.metric,
     )
     stats.n_distance_computations += n_scored
     stats.n_rerank_distance_computations += n_scored
@@ -773,8 +790,8 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     # one exact-f32 epilogue per query over the merged quantized top-kq
     from repro.kernels import ops  # deferred: keep the f32 path jax-free
 
-    out, _, n_scored = ops.rerank_exact(
-        topo.data, merged, queries, k, topo.metric
+    out, _, n_scored = _rerank_exact_timed(
+        ops, topo.data, merged, queries, k, topo.metric
     )
     stats.n_distance_computations += n_scored
     stats.n_rerank_distance_computations += n_scored

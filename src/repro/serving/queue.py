@@ -49,6 +49,9 @@ class PendingRequest:
     t_submit: float  # clock units (seconds); queueing latency starts here
     nprobe: Any = None  # per-request routing override (NprobeSpec)
     dtype: str = "f32"  # per-request distance-stage override
+    rid: int = -1  # server-assigned request id (trace lane key)
+    t_flush: float = 0.0  # when the batch holding this request flushed;
+    # queue wait = t_flush - t_submit (stamped by the worker)
 
 
 class MicroBatcher:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import itertools
 import time
 from typing import Any
 
@@ -39,9 +40,21 @@ from repro.serving.policy import AdaptiveWindow, FixedWindow, SLOPolicy
 from repro.serving.queue import (MicroBatcher, PendingRequest, RequestQueue,
                                  ServerOverloadedError)
 from repro.serving.stats import ServerStats
+from repro.telemetry import (SignatureGuard, collect_stages, current_tracer,
+                             install_compile_listener)
 
 # sentinel: "use the server-level default" for per-request options
 USE_DEFAULT = object()
+
+# distinguishes trace-lane ids across servers in one process (a bench runs
+# several trials; request ids restart at 0 but lane keys must not collide)
+_SERVER_SEQ = itertools.count()
+
+_POST_WARM_METRIC = (
+    "serving_post_warm_signatures_total",
+    "engine-call signatures first seen after warm-up "
+    "(mid-traffic retrace risk)",
+)
 
 
 def bucket_batch_size(m: int, max_batch: int) -> int:
@@ -139,11 +152,21 @@ class AnnServer:
     ``"auto"``) and ``dtype`` (e.g. ``"uint8"``) overrides; the worker
     groups a flushed batch by the ``(nprobe, dtype)`` pair so mixed
     batches still make one engine call per distinct option set.
+
+    ``tracer`` (default: the process-wide :func:`current_tracer`) draws
+    every request as an async lane on the timeline — submit → queue wait
+    → batch assembly → engine → rerank → future resolution, keyed by
+    request id.  The tracer's clock **must share the server's** (pass
+    ``Tracer(clock=time.monotonic)`` for the default server clock):
+    request timestamps are taken with ``self.clock`` and emitted into the
+    tracer's time base verbatim.  With the default no-op tracer the hot
+    path pays a single ``enabled`` branch per request.
     """
 
     def __init__(self, index_or_shards, config: ServingConfig | None = None,
                  *, data: np.ndarray | None = None,
-                 policy: SLOPolicy | None = None, clock=time.monotonic):
+                 policy: SLOPolicy | None = None, clock=time.monotonic,
+                 tracer=None):
         self.config = cfg = config or ServingConfig()
         self.topology = as_topology(index_or_shards, data,
                                     metric=cfg.metric or "l2")
@@ -162,6 +185,15 @@ class AnnServer:
             )
         self.stats = ServerStats()
         self.clock = clock
+        self.tracer = current_tracer() if tracer is None else tracer
+        self._scope = next(_SERVER_SEQ)
+        self._rids = itertools.count()
+        self._sig_guard = SignatureGuard()
+        self.stats.registry.counter(*_POST_WARM_METRIC)  # expose at zero
+        if self.tracer.enabled:
+            # compile events land on the same timeline as the requests
+            # they delay (idempotent; no-op without jax.monitoring)
+            install_compile_listener()
         if policy is None:
             policy = (AdaptiveWindow(cfg.max_wait_ms, cfg.max_batch)
                       if cfg.adaptive_window else FixedWindow(cfg.max_wait_ms))
@@ -244,6 +276,7 @@ class AnnServer:
             t_submit=self.clock() if t_submit is None else t_submit,
             nprobe=self.config.nprobe if nprobe is USE_DEFAULT else nprobe,
             dtype=self.config.dtype if dtype is USE_DEFAULT else dtype,
+            rid=next(self._rids),
         )
         try:
             shed = self._queue.submit(req)
@@ -291,10 +324,16 @@ class AnnServer:
             # without bucketing the engine sees one shape per occupancy —
             # pre-tracing the power-of-two set would warm the wrong shapes
             await loop.run_in_executor(None, self._pretrace)
+        # from here on, a first-seen engine-call signature is a retrace
+        # landing inside live traffic — exactly what the guard counts
+        self._sig_guard.finish_warmup()
         while True:
             batch = await self._queue.next_batch()
             if batch is None:
                 return
+            t_flush = self.clock()
+            for req in batch:
+                req.t_flush = t_flush
             self._inflight = batch  # visible to the death handler
             try:
                 if self.config.run_in_executor:
@@ -311,15 +350,50 @@ class AnnServer:
                 self._inflight = []
                 continue
             now = self.clock()
-            for req, (ids, group_size) in zip(batch, outs):
+            traced = self.tracer.enabled
+            for req, (ids, group_size, t_eng0, t_eng1, rerank_s) in zip(
+                    batch, outs):
                 if req.future.done():  # submitter gave up (cancelled)
                     continue
-                self.stats.record_completion(req.t_submit, now)
+                self.stats.record_completion(
+                    req.t_submit, now,
+                    queue_wait_s=req.t_flush - req.t_submit,
+                    engine_s=t_eng1 - t_eng0,
+                )
                 req.future.set_result(QueryResult(
                     ids=ids, latency_s=max(now - req.t_submit, 0.0),
                     batch_size=group_size,
                 ))
+                if traced:
+                    self._emit_request_trace(req, now, t_eng0, t_eng1,
+                                             rerank_s)
             self._inflight = []
+
+    def _emit_request_trace(self, req: PendingRequest, t_done: float,
+                            t_eng0: float, t_eng1: float,
+                            rerank_s: float) -> None:
+        """One request's life as an async lane: the ``serve.request``
+        parent plus contiguous child phases that tile it end to end
+        (queue wait → batch assembly → engine → rerank → resolution), all
+        keyed by the request id so overlapping requests render as
+        separate lanes.  Emitted after resolution; timestamps are the
+        server-clock readings the worker already took, so tracing adds no
+        clock reads to the hot path."""
+        tr = self.tracer
+        aid = f"srv{self._scope}:req{req.rid}"
+        t_rr0 = max(t_eng1 - rerank_s, t_eng0)
+        tr.async_complete("serve.request", aid, req.t_submit, t_done,
+                          cat="serving", track="requests", rid=req.rid)
+        tr.async_complete("serve.queue_wait", aid, req.t_submit,
+                          req.t_flush, cat="serving", track="requests")
+        tr.async_complete("serve.batch", aid, req.t_flush, t_eng0,
+                          cat="serving", track="requests")
+        tr.async_complete("serve.engine", aid, t_eng0, t_rr0,
+                          cat="serving", track="requests")
+        tr.async_complete("serve.rerank", aid, t_rr0, t_eng1,
+                          cat="serving", track="requests")
+        tr.async_complete("serve.resolve", aid, t_eng1, t_done,
+                          cat="serving", track="requests")
 
     def _pretrace(self) -> None:
         """Warm every batch shape the worker can produce (index vectors
@@ -347,22 +421,31 @@ class AnnServer:
             b <<= 1
         dtypes = dict.fromkeys((cfg.dtype, *cfg.pretrace_dtypes))
         data = np.asarray(self.topology.data, np.float32)
+        nprobe_key = parse_nprobe(cfg.nprobe)
         for size in sorted(sizes):
             qs = np.resize(data[: min(len(data), size)], (size, self._dim))
             for dtype in dtypes:
+                self._sig_guard.warm(
+                    (cfg.backend, size, nprobe_key, dtype)
+                )
                 search(self.topology, qs, cfg.k, backend=cfg.backend,
                        width=cfg.width, n_entries=cfg.n_entries,
                        nprobe=cfg.nprobe, dtype=dtype, rerank=cfg.rerank)
 
-    def _execute(self, batch: list[PendingRequest]) -> list[np.ndarray]:
+    def _execute(self, batch: list[PendingRequest]) -> list[tuple]:
         """One flushed batch → engine calls, grouped by the per-request
         ``(nprobe, dtype)`` option pair.
 
         Runs in an executor thread; touches no asyncio state.  Batches are
         bucket-padded by cycling real queries (the padded lanes recompute
         real work, so results are unaffected and stats can be rescaled).
+        Each request's slot carries its engine call's ``(t0, t1)`` window
+        (server-clock readings — cross-thread safe with the monotonic
+        default) and the exact-rerank share of it, for the latency
+        decomposition and the per-request trace lanes.
         """
         cfg = self.config
+        clk = self.clock
         # key on the *parsed* nprobe spec so equivalent forms ("auto" vs
         # ("auto", DEFAULT_AUTO_MARGIN), 2 vs np.int64(2)) share one
         # engine call instead of splitting the batch; dtype is already
@@ -372,20 +455,32 @@ class AnnServer:
             key = (parse_nprobe(req.nprobe), req.dtype)
             groups.setdefault(key, (req.nprobe, req.dtype, []))[2].append(i)
         out: list[tuple | None] = [None] * len(batch)
-        for nprobe, dtype, idxs in groups.values():
+        for key, (nprobe, dtype, idxs) in groups.items():
             queries = np.stack([batch[i].query for i in idxs])
             m = len(idxs)
             b = bucket_batch_size(m, cfg.max_batch) if cfg.bucket_batches \
                 else m
             if b > m:
                 queries = np.resize(queries, (b, queries.shape[1]))
-            t0 = time.perf_counter()
-            ids, st = search(
-                self.topology, queries, cfg.k, backend=cfg.backend,
-                width=cfg.width, n_entries=cfg.n_entries, nprobe=nprobe,
-                dtype=dtype, rerank=cfg.rerank,
-            )
-            self.stats.observe_batch(m, b, st, time.perf_counter() - t0)
+            _, post_warm = self._sig_guard.observe((cfg.backend, b) + key)
+            if post_warm:  # mid-traffic retrace risk: shape never warmed
+                # resolved through the live stats object: benches swap
+                # self.stats for a fresh window and must keep the count
+                self.stats.registry.counter(*_POST_WARM_METRIC).inc()
+                if self.tracer.enabled:
+                    self.tracer.instant("serve.retrace_risk", track="jit",
+                                        backend=cfg.backend, batch=b,
+                                        dtype=dtype)
+            t0 = clk()
+            with collect_stages() as stages:
+                ids, st = search(
+                    self.topology, queries, cfg.k, backend=cfg.backend,
+                    width=cfg.width, n_entries=cfg.n_entries, nprobe=nprobe,
+                    dtype=dtype, rerank=cfg.rerank,
+                )
+            t1 = clk()
+            self.stats.observe_batch(m, b, st, t1 - t0)
+            rerank_s = stages.get("search.rerank", 0.0)
             for j, i in enumerate(idxs):
-                out[i] = (ids[j], m)
+                out[i] = (ids[j], m, t0, t1, rerank_s)
         return out  # type: ignore[return-value]
