@@ -6,7 +6,8 @@ re-rank), 8 vectorized vs seed-loop build timing, 9 the fused
 device-resident beam engine (backend="pallas"), 10 preemption-tolerant
 spot-fleet builds (checkpoint/resume through an injected kill), traced
 end-to-end with the telemetry subsystem (README §10 — open the written
-trace at https://ui.perfetto.dev).
+trace at https://ui.perfetto.dev), 11 the live mutable index
+(insert/delete/search under churn with epoch-swapped serving).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -189,6 +190,48 @@ def main():
           f"{rounds:.0f} round spans across {chk['n_worker_tracks']} "
           f"worker tracks; kill->backoff->resume on the timeline: "
           f"{chk['ok']} — open {trace_path} at https://ui.perfetto.dev")
+
+    # 11. The live mutable index: insert_batch runs one batched Vamana
+    #     round per touched shard, delete_batch tombstones ids (masked out
+    #     of every result until consolidate() makes them physical), and
+    #     snapshot() is a copy-on-write generation — untouched shards
+    #     share arrays with the previous snapshot, so per-shard device
+    #     caches stay warm.  AnnServer.swap_topology() flips a serving
+    #     process to the new generation atomically, mid-traffic.
+    from repro.live import LiveConfig, LiveIndex
+
+    li = LiveIndex.from_build(res, ds.data, cfg, LiveConfig(backend="jax"))
+    rng = np.random.default_rng(7)             # fresh points: jittered
+    fresh = (ds.data[rng.choice(len(ds.data), 32, replace=False)]
+             + rng.normal(0, 0.05, (32, 64)).astype(np.float32))
+    new_ids = li.insert_batch(fresh)           # routed to nearest shards
+    victim = int(ds.gt[0, 0])                  # query 0's true top-1 ...
+    li.delete_batch(np.array([victim]))        # ... tombstoned
+    ids, _ = search(li.snapshot(), ds.queries, k=10, backend="jax",
+                    width=96)
+    found = int(np.isin(new_ids, search(
+        li.snapshot(), fresh[:8], k=1, backend="jax", width=96,
+    )[0].ravel()).sum())
+    print(f"[live] gen {li.generation}: inserted {len(new_ids)} "
+          f"(first 8 self-findable: {found}/8), deleted id {victim} "
+          f"returned anywhere: {bool((ids == victim).any())}")
+    rep = li.consolidate()                     # dead rows go physical
+    print(f"[live] consolidate: re-pruned {rep['rows_repruned']} rows, "
+          f"removed {rep['removed']} tombstones "
+          f"({li.n_live} live of {li.n_vectors} ids)")
+
+    async def swap_mid_traffic():
+        sc = ServingConfig(backend="jax", k=10, width=96, max_batch=32,
+                           max_wait_ms=2.0)
+        async with AnnServer(li.snapshot(), config=sc) as srv:
+            wave = [srv.submit_nowait(q) for q in ds.queries[:16]]
+            li.insert_batch(fresh[:16] + 0.1)
+            gen = srv.swap_topology(li.snapshot())  # atomic epoch swap
+            outs = await asyncio.gather(*wave)
+            print(f"[live] epoch swap -> serving generation {gen}, "
+                  f"{len(outs)}/16 in-flight futures resolved")
+
+    asyncio.run(swap_mid_traffic())
 
 
 if __name__ == "__main__":

@@ -40,9 +40,31 @@ class GlobalIndex:
     def entry_points(self, n: int = 16) -> np.ndarray:
         """Medoid + a stratified sample — CAGRA-style multi-entry seeds (a
         merged kNN graph has only local edges; multiple entries restore
-        navigability; deterministic so serving replicas agree)."""
-        extra = np.linspace(0, self.n_vectors - 1, n, dtype=np.int64)
-        return np.unique(np.concatenate([[self.medoid], extra]))
+        navigability; deterministic so serving replicas agree).
+
+        Always exactly ``min(n + 1, n_vectors)`` unique seeds: the medoid
+        regularly collides with one of the ``linspace`` samples, and before
+        the deterministic top-up below a collision silently shrank the seed
+        set — replicas agreed with each other but not with the documented
+        contract, and searches seeded one entry short."""
+        want = min(n + 1, self.n_vectors)
+        seeds = np.unique(np.concatenate(
+            [[self.medoid], np.linspace(0, self.n_vectors - 1, n,
+                                        dtype=np.int64)]
+        ))
+        if len(seeds) < want:
+            # top up with the smallest ids not already chosen — ids in
+            # [0, want + len(seeds)) suffice by pigeonhole, so the scan
+            # stays O(n), not O(n_vectors)
+            fresh = np.setdiff1d(
+                np.arange(min(want + len(seeds), self.n_vectors),
+                          dtype=np.int64), seeds,
+                assume_unique=True,
+            )
+            seeds = np.unique(np.concatenate(
+                [seeds, fresh[: want - len(seeds)]]
+            ))
+        return seeds
 
     @property
     def degree(self) -> int:

@@ -279,6 +279,24 @@ def assign_block_sequential(
     return BlockAssignment(assign, odist, replicas, np.asarray(rds, np.float32))
 
 
+def split_shard_rows(
+    rows: np.ndarray, *, iters: int = 12, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """2-means re-centering for a shard that outgrew its centroid (the
+    live mutation layer, ``repro.live``): train two centroids on the
+    shard's rows with the partitioner's kmeans machinery and assign each
+    row to its nearest.  Returns ``(assign [n] in {0, 1},
+    centroids [2, D] f32)``.  No capacity/replica logic — a live split is
+    a local re-partition of one shard's residents, not a re-run of
+    Algorithm 1."""
+    rows = np.asarray(rows, np.float32)
+    cent = _kmeans.train_centroids(
+        rows, 2, iters=iters, sample=len(rows), seed=seed
+    )
+    d = _distances_to_centroids(rows, cent)
+    return np.argmin(d, axis=1).astype(np.int64), np.asarray(cent, np.float32)
+
+
 # ---------------------------------------------------------------------------
 # Full-dataset driver
 # ---------------------------------------------------------------------------

@@ -95,7 +95,6 @@ def robust_prune(
     cand_d = cand_d[order]
     alive = np.ones(len(cand), bool)
     alive &= cand != p_id
-    p_star_rows = []
     while alive.any() and len(keep_ids) < R:
         i = int(np.argmax(alive))  # first alive == closest alive
         v = int(cand[i])
@@ -108,7 +107,6 @@ def robust_prune(
         counter[0] += len(rest)
         occluded = alpha * d_vs <= cand_d[rest]
         alive[rest[occluded]] = False
-        p_star_rows.append(v)
     return np.asarray(keep_ids, np.int64)
 
 
@@ -351,6 +349,14 @@ def build_shard_index_vamana(
     data = np.asarray(vectors, np.float32)
     n = len(data)
     R = min(cfg.degree, max(1, n - 1))
+    if n <= 1:
+        # degenerate shard — tombstone consolidation and shard-split can
+        # hand the builder empty or single-point shards; there is no medoid
+        # to argmin and no round to run (an empty batch would also break
+        # the np.resize shape-stabilizer), so the graph is trivially edgeless
+        return ShardIndex(
+            graph=np.full((n, R), -1, np.int32), n_distance_computations=0
+        )
     L = cfg.build_degree
     rng = np.random.default_rng(seed)
     counter = [0]
@@ -457,6 +463,10 @@ def build_shard_index_vamana_sequential(
     data = np.asarray(vectors, np.float32)
     n = len(data)
     R = min(cfg.degree, max(1, n - 1))
+    if n <= 1:  # degenerate shard: same early return as the batched build
+        return ShardIndex(
+            graph=np.full((n, R), -1, np.int32), n_distance_computations=0
+        )
     L = cfg.build_degree
     rng = np.random.default_rng(seed)
     counter = [0]

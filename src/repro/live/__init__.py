@@ -1,0 +1,9 @@
+"""Online mutation layer: batched inserts, tombstone deletes, background
+consolidation, and kmeans shard splits over the shard search engine —
+served through immutable copy-on-write snapshot generations.  See
+:mod:`repro.live.index` for the full design notes.
+"""
+
+from repro.live.index import LiveConfig, LiveIndex
+
+__all__ = ["LiveConfig", "LiveIndex"]

@@ -1,0 +1,546 @@
+"""`LiveIndex` — the online mutation layer over the shard engine.
+
+The paper's divide-and-merge pipeline (§IV) is build-once; this module is
+the streaming-update path the GPU graph-search literature names as the
+open direction: the corpus changes while serving keeps answering.  Three
+mutations, all reusing the offline machinery rather than re-deriving it:
+
+* :meth:`LiveIndex.insert_batch` — routes new points to shards via the
+  partitioner's centroids, then runs **one batched Vamana insertion
+  round** per target shard: the engine's batched beam
+  (:func:`repro.search.beam_pool`) collects each new point's visited
+  pool, :func:`~repro.core.vamana.robust_prune_batch` sets its neighbor
+  list, and :func:`~repro.core.vamana._apply_reverse_edges` links it
+  back — exactly the offline build's round body, applied to a live graph.
+* :meth:`LiveIndex.delete_batch` — tombstones ids.  Dead points keep
+  their rows and edges (the graph stays navigable through them) but the
+  search drivers mask them out of the merged pools and the final top-k
+  (``ShardTopology.tombstones``), so a deleted id is *never returned*
+  from the moment the next snapshot swaps in.
+* :meth:`LiveIndex.consolidate` — the background pass that makes deletes
+  physical (FreshDiskANN-style): rows whose neighbor lists decayed past
+  ``consolidate_threshold`` re-prune over ``live neighbors ∪ live 2-hop
+  through dead neighbors``, then dead rows are removed with a local-id
+  remap and the tombstone mask drops back out of the hot path.
+
+A shard that outgrows ``split_max`` residents is split in two with the
+partitioner's kmeans machinery (:func:`repro.core.partition
+.split_shard_rows`) and both halves are rebuilt offline — the live
+analogue of re-centering.
+
+**Generations (copy-on-write).**  Mutations never modify an array a
+previous :meth:`snapshot` handed out: per-shard stores/graphs/id-lists
+are *replaced* for mutated shards and shared for untouched ones, and the
+global data/tombstone arrays grow by copy.  A snapshot is therefore an
+immutable generation a server can keep answering on while the next one
+is built, and swapping is one atomic attribute store
+(:meth:`repro.serving.server.AnnServer.swap_topology`).  Sharing
+untouched shards' arrays is also what keeps device caches warm: the
+fused ``pallas`` backend keys its host→device cache on ``id(storage)``,
+so after a mutation only the mutated shards re-upload — snapshots
+pre-populate ``ShardTopology``'s ``shard_store()`` / ``shard_quant()`` /
+``shard_entries()`` caches from the live state for exactly that reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import IndexConfig
+from repro.core.partition import split_shard_rows
+from repro.core.vamana import (_apply_reverse_edges, build_shard_index_vamana,
+                               robust_prune_batch)
+from repro.search import ShardTopology
+from repro.search.types import QuantSpec, _to_bf16
+from repro.telemetry import current_registry, current_tracer
+
+DEFAULT_SPLIT_FACTOR = 2.0
+DEFAULT_INSERT_BATCH = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveConfig:
+    """Knobs for :class:`LiveIndex` (the graph knobs — degree R, build
+    width L — come from the :class:`~repro.configs.base.IndexConfig` the
+    offline build used, so live and offline graphs share semantics).
+
+    ``alpha`` — RobustPrune's α for insert rounds and consolidation
+    re-prunes (the offline build's second-pass value).
+    ``backend`` — engine backend for the insert beam searches.
+    ``consolidate_threshold`` — a live row re-prunes during
+    :meth:`LiveIndex.consolidate` when more than this fraction of its
+    neighbors are tombstoned; below it the dead edges are simply dropped
+    (the FreshDiskANN trade: re-pruning everything is offline-build
+    work, re-pruning nothing lets connectivity decay).
+    ``split_max`` — resident count past which a shard splits in two;
+    ``None`` derives ``split_factor ×`` the initial mean shard size at
+    construction.
+    ``batch_size`` — insert-round grain (the offline build's round
+    batch).
+    """
+
+    alpha: float = 1.2
+    backend: str = "numpy"
+    consolidate_threshold: float = 0.25
+    split_max: int | None = None
+    split_factor: float = DEFAULT_SPLIT_FACTOR
+    batch_size: int = DEFAULT_INSERT_BATCH
+
+
+class LiveIndex:
+    """Mutable shard index: batched inserts, tombstone deletes, background
+    consolidation, kmeans shard splits — served through immutable
+    copy-on-write :meth:`snapshot` generations.
+
+    Construct from a served topology (:meth:`from_topology`) or straight
+    from an offline build (:meth:`from_build`).  All mutation methods are
+    synchronous and single-writer by design: the serving story is *one*
+    mutator building the next generation while any number of readers
+    answer on previous snapshots.
+    """
+
+    def __init__(self, topology: ShardTopology, cfg: IndexConfig,
+                 live: LiveConfig | None = None):
+        if topology.tombstones is not None:
+            raise ValueError(
+                "construct LiveIndex from a clean topology; tombstones are "
+                "owned by the live layer"
+            )
+        self.cfg = cfg
+        self.live = live or LiveConfig()
+        self.metric = topology.metric
+        self._data = np.asarray(topology.data, np.float32)
+        self._ids = [np.asarray(i, np.int64) for i in topology.shard_ids]
+        self._graphs = [np.asarray(g, np.int32) for g in topology.shard_graphs]
+        self._stores = [
+            np.asarray(self._data[i], np.float32) for i in self._ids
+        ]
+        if topology.centroids is not None:
+            self._centroids = np.asarray(topology.centroids, np.float32)
+        else:  # routing needs centroids; derive them from the residents
+            self._centroids = np.stack([
+                s.mean(axis=0) if len(s) else np.zeros(
+                    self._data.shape[1], np.float32)
+                for s in self._stores
+            ]).astype(np.float32)
+        self._tombstones = np.zeros(len(self._data), bool)
+        self._dead_in_shard = np.zeros(len(self._ids), np.int64)
+        self._entries = np.zeros(len(self._ids), np.int64)
+        for s in range(len(self._ids)):
+            self._recompute_entry(s)
+        # per-dtype per-shard quantized views; a mutated shard's slot is
+        # reset to None and lazily rebuilt at the next snapshot
+        self._quant_views: dict[str, list] = {}
+        sizes = [len(i) for i in self._ids if len(i)]
+        self._split_max = self.live.split_max or max(
+            64, int(self.live.split_factor * (
+                sum(sizes) / len(sizes) if sizes else 1))
+        )
+        self.generation = 0
+        self.n_distance_computations = 0
+
+    # ---- constructors ---------------------------------------------------
+
+    @classmethod
+    def from_topology(cls, topology: ShardTopology, cfg: IndexConfig,
+                      live: LiveConfig | None = None) -> "LiveIndex":
+        return cls(topology, cfg, live)
+
+    @classmethod
+    def from_build(cls, result, data: np.ndarray, cfg: IndexConfig,
+                   live: LiveConfig | None = None) -> "LiveIndex":
+        """From a :class:`~repro.core.builder.BuildResult` — serves the
+        pre-merge routed shard view (the partition's centroids come
+        along for insert routing)."""
+        return cls(result.shard_topology(data), cfg, live)
+
+    # ---- introspection --------------------------------------------------
+
+    @property
+    def n_vectors(self) -> int:
+        """Total vectors ever inserted (tombstoned ones included)."""
+        return len(self._data)
+
+    @property
+    def n_live(self) -> int:
+        return int(len(self._data) - self._tombstones.sum())
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._ids)
+
+    @property
+    def resident_dead(self) -> int:
+        """Tombstoned ids still occupying shard rows (0 after a full
+        :meth:`consolidate` — the snapshot drops its tombstone mask and
+        the search fast paths come back)."""
+        return int(self._dead_in_shard.sum())
+
+    # ---- snapshotting ---------------------------------------------------
+
+    def snapshot(self) -> ShardTopology:
+        """An immutable serving generation.
+
+        Untouched shards share their arrays with previous snapshots —
+        and the topology's derived caches (``shard_store`` /
+        ``shard_quant`` / ``shard_entries``) are pre-populated from the
+        live state — so identity-keyed device caches stay warm for
+        everything a mutation didn't touch.  The tombstone mask rides
+        along only while deleted ids are still resident.
+        """
+        topo = ShardTopology(
+            data=self._data,
+            shard_ids=list(self._ids),
+            shard_graphs=list(self._graphs),
+            metric=self.metric,
+            centroids=self._centroids,
+            tombstones=self._tombstones if self.resident_dead else None,
+        )
+        topo._store_cache = list(self._stores)
+        topo._entries = self._entries.copy()
+        for dtype in self._quant_views:
+            topo._quant_cache[dtype] = self._quant_list(dtype)
+        return topo
+
+    def prepare(self, dtype: str) -> None:
+        """Register a staged distance dtype (``"bf16"`` / ``"uint8"``):
+        every snapshot from here on carries pre-built per-shard quantized
+        views, rebuilt only for mutated shards."""
+        self._quant_list(dtype)
+
+    def _quant_list(self, dtype: str) -> list:
+        views = self._quant_views.setdefault(dtype, [None] * len(self._ids))
+        for s, v in enumerate(views):
+            if v is None:
+                rows = self._stores[s]
+                if dtype == "uint8":
+                    spec = QuantSpec.from_data(rows)
+                    views[s] = (spec.quantize(rows), spec)
+                elif dtype == "bf16":
+                    views[s] = (_to_bf16(rows), None)
+                else:
+                    raise ValueError(f"no quantized view for dtype {dtype!r}")
+        return list(views)
+
+    # ---- mutation: inserts ----------------------------------------------
+
+    def insert_batch(self, vectors: np.ndarray) -> np.ndarray:
+        """Insert a batch of new vectors; returns their global ids.
+
+        Each point routes to its nearest-centroid shard, then every
+        target shard runs one batched Vamana round over its new points:
+        beam-search the shard graph for each point's visited pool
+        (seeded at the shard entry — new rows have no incoming edges yet,
+        so the search sees exactly the pre-insert graph), RobustPrune the
+        pool into the point's neighbor list, and apply grouped reverse
+        edges with overflow re-prune.  Mutated shards' arrays are
+        replaced (copy-on-write); any shard that outgrows ``split_max``
+        is split in two afterwards.
+        """
+        X = np.atleast_2d(np.asarray(vectors, np.float32))
+        m = len(X)
+        if m == 0:
+            return np.empty(0, np.int64)
+        if X.shape[1] != self._data.shape[1]:
+            raise ValueError(
+                f"insert dim {X.shape[1]} != index dim {self._data.shape[1]}"
+            )
+        tr = current_tracer()
+        reg = current_registry()
+        gids = len(self._data) + np.arange(m, dtype=np.int64)
+        with tr.span("live.insert", track="live", n=m):
+            if self.metric == "ip":
+                scores = -(X @ self._centroids.T)
+            else:
+                scores = (
+                    (X * X).sum(1)[:, None]
+                    - 2.0 * (X @ self._centroids.T)
+                    + (self._centroids * self._centroids).sum(1)[None, :]
+                )
+            assign = np.argmin(scores, axis=1)
+            self._data = np.concatenate([self._data, X])
+            self._tombstones = np.concatenate(
+                [self._tombstones, np.zeros(m, bool)]
+            )
+            touched = []
+            for s in np.unique(assign):
+                rows = assign == s
+                self._insert_into_shard(int(s), X[rows], gids[rows])
+                touched.append(int(s))
+            for s in touched:
+                if len(self._ids[s]) > self._split_max:
+                    self._split_shard(s)
+        self.generation += 1
+        reg.counter("live_inserts_total",
+                    "vectors inserted through the live layer").inc(m)
+        reg.gauge("live_generation",
+                  "mutation generation of the live index"
+                  ).set(self.generation)
+        return gids
+
+    def _insert_into_shard(self, s: int, X: np.ndarray,
+                           gids: np.ndarray) -> None:
+        from repro.search import beam_pool  # deferred, as in core.vamana
+
+        old_store = self._stores[s]
+        n0 = len(old_store)
+        mB = len(X)
+        n = n0 + mB
+        store = np.concatenate([old_store, X]) if n0 else X.copy()
+        R = min(self.cfg.degree, max(1, n - 1))
+        counter = [0]
+        if n0 == 0:
+            # empty shard: nothing to link against — offline-build the
+            # newcomers (the n<=1 degenerate guard handles tiny batches)
+            idx = build_shard_index_vamana(
+                store, self.cfg, alpha=self.live.alpha,
+                backend=self.live.backend, seed=self.cfg.seed,
+            )
+            graph = np.asarray(idx.graph, np.int64)
+            counter[0] += idx.n_distance_computations
+        else:
+            R_old = self._graphs[s].shape[1]
+            graph = np.full((n, max(R, R_old)), -1, np.int64)
+            graph[:n0, :R_old] = self._graphs[s]  # COW: old rows copied
+            pool = max(self.cfg.build_degree, R + 1)
+            entry = int(self._entries[s])
+            alpha = self.live.alpha
+            nb = self.live.batch_size
+            for b0 in range(0, mB, nb):
+                batch = np.arange(n0 + b0, n0 + min(b0 + nb, mB))
+                pool_ids, pool_d, p_stats = beam_pool(
+                    store, graph, entry, X[b0:b0 + nb], pool,
+                    backend=self.live.backend, metric=self.metric,
+                    n_iters=pool,
+                )
+                counter[0] += p_stats.n_distance_computations
+                pruned = robust_prune_batch(
+                    batch, pool_ids, pool_d, store, alpha, R, counter
+                )
+                graph[batch] = -1
+                graph[batch, : pruned.shape[1]] = pruned
+                _apply_reverse_edges(
+                    batch, pruned, graph, store, alpha, R, counter
+                )
+        self.n_distance_computations += counter[0]
+        self._ids[s] = np.concatenate([self._ids[s], gids])
+        self._stores[s] = store
+        self._graphs[s] = graph.astype(np.int32)
+        self._touch_shard(s)
+
+    # ---- mutation: deletes ----------------------------------------------
+
+    def delete_batch(self, ids: np.ndarray) -> int:
+        """Tombstone ids; returns how many were newly deleted.
+
+        O(1) per id on the serving path: nothing in any shard moves —
+        the next snapshot carries the (copied) tombstone mask and the
+        search drivers mask dead candidates out of pools and the final
+        top-k.  Edges through dead points keep working until
+        :meth:`consolidate` removes them.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        if ids.size and (ids[0] < 0 or ids[-1] >= len(self._data)):
+            raise ValueError("delete id out of range")
+        fresh = ids[~self._tombstones[ids]] if ids.size else ids
+        if fresh.size == 0:
+            return 0
+        tr = current_tracer()
+        reg = current_registry()
+        with tr.span("live.delete", track="live", n=int(fresh.size)):
+            tomb = self._tombstones.copy()  # COW: snapshots keep the old mask
+            tomb[fresh] = True
+            self._tombstones = tomb
+            mask = np.zeros(len(self._data), bool)
+            mask[fresh] = True
+            for s, sids in enumerate(self._ids):
+                if len(sids):
+                    self._dead_in_shard[s] += int(mask[sids].sum())
+        self.generation += 1
+        reg.counter("live_deletes_total",
+                    "ids tombstoned through the live layer"
+                    ).inc(int(fresh.size))
+        reg.gauge("live_tombstones_resident",
+                  "tombstoned ids still resident in shard rows"
+                  ).set(self.resident_dead)
+        reg.gauge("live_generation",
+                  "mutation generation of the live index"
+                  ).set(self.generation)
+        return int(fresh.size)
+
+    # ---- mutation: consolidation ----------------------------------------
+
+    def consolidate(self, threshold: float | None = None) -> dict:
+        """Make tombstones physical (the background pass).
+
+        Per shard with resident dead ids: live rows whose dead-neighbor
+        fraction exceeds ``threshold`` re-prune over ``live neighbors ∪
+        live 2-hop through dead neighbors`` (RobustPrune self-occludes
+        duplicates, so the union needs no dedup); every other live row
+        just drops its dead edges.  Then dead rows are physically removed
+        with a local-id remap, rows re-compacted, and the shard's entry
+        recomputed.  Once nothing dead is resident the snapshot's
+        tombstone mask disappears and the un-widened search paths (and
+        the fused merged dispatch) come back.
+
+        Returns ``{"rows_repruned": ..., "removed": ..., "shards": ...}``.
+        """
+        thr = self.live.consolidate_threshold if threshold is None \
+            else threshold
+        tr = current_tracer()
+        reg = current_registry()
+        repruned = removed = shards = 0
+        counter = [0]
+        with tr.span("live.consolidate", track="live",
+                     resident=self.resident_dead):
+            for s in range(len(self._ids)):
+                if self._dead_in_shard[s] == 0:
+                    continue
+                r, d = self._consolidate_shard(s, thr, counter)
+                repruned += r
+                removed += d
+                shards += 1
+        self.n_distance_computations += counter[0]
+        self.generation += 1
+        reg.counter("live_consolidations_total",
+                    "consolidation passes completed").inc()
+        reg.counter("live_rows_repruned_total",
+                    "rows re-pruned by consolidation").inc(repruned)
+        reg.gauge("live_tombstones_resident",
+                  "tombstoned ids still resident in shard rows"
+                  ).set(self.resident_dead)
+        reg.gauge("live_generation",
+                  "mutation generation of the live index"
+                  ).set(self.generation)
+        return {"rows_repruned": repruned, "removed": removed,
+                "shards": shards}
+
+    def _consolidate_shard(self, s: int, thr: float,
+                           counter: list) -> tuple[int, int]:
+        ids = self._ids[s]
+        store = self._stores[s]
+        graph = np.asarray(self._graphs[s], np.int64)  # copy (COW) + widen
+        n, R = graph.shape
+        dead = self._tombstones[ids]  # local mask
+        nbr_valid = graph >= 0
+        nbr_dead = nbr_valid & dead[np.maximum(graph, 0)]
+        frac = nbr_dead.sum(1) / np.maximum(nbr_valid.sum(1), 1)
+        fix = np.nonzero(~dead & (frac > thr))[0]
+        if fix.size:
+            # candidates: live direct neighbors ∪ live 2-hop through dead
+            c1 = np.where(nbr_valid[fix] & ~nbr_dead[fix], graph[fix], -1)
+            two = graph[np.maximum(graph[fix], 0)]  # [f, R, R]
+            ok2 = (nbr_dead[fix][:, :, None] & (two >= 0)
+                   & ~dead[np.maximum(two, 0)])
+            cand = np.concatenate(
+                [c1, np.where(ok2, two, -1).reshape(fix.size, R * R)], axis=1
+            )
+            cvecs = np.asarray(
+                store[np.maximum(cand, 0).reshape(-1)], np.float32
+            ).reshape(fix.size, cand.shape[1], -1)
+            diff = cvecs - store[fix][:, None, :]
+            cand_d = np.where(
+                cand >= 0, np.einsum("bcd,bcd->bc", diff, diff), np.inf
+            ).astype(np.float32)
+            counter[0] += int((cand >= 0).sum())
+            pruned = robust_prune_batch(
+                fix, cand, cand_d, store, self.live.alpha, R, counter,
+                vecs=cvecs,
+            )
+            graph[fix] = -1
+            graph[fix, : pruned.shape[1]] = pruned
+        # physical removal: drop dead rows, remap local ids, strip any
+        # remaining dead edges (rows under the threshold), re-compact
+        keep = ~dead
+        remap = np.full(n, -1, np.int64)
+        remap[keep] = np.arange(int(keep.sum()))
+        g = graph[keep]
+        g = np.where(g >= 0, remap[np.maximum(g, 0)], -1)
+        order = np.argsort(g < 0, axis=1, kind="stable")
+        g = np.take_along_axis(g, order, axis=1)
+        self._ids[s] = ids[keep]
+        self._stores[s] = np.ascontiguousarray(store[keep])
+        self._graphs[s] = g.astype(np.int32)
+        n_removed = int(dead.sum())
+        self._dead_in_shard[s] = 0
+        self._touch_shard(s)
+        return int(fix.size), n_removed
+
+    # ---- mutation: shard split ------------------------------------------
+
+    def _split_shard(self, s: int) -> None:
+        tr = current_tracer()
+        reg = current_registry()
+        rows = self._stores[s]
+        with tr.span("live.split", track="live", shard=s, n=len(rows)):
+            assign, cents = split_shard_rows(rows, seed=self.cfg.seed)
+            if (assign == 0).all() or (assign == 1).all():
+                return  # degenerate 2-means (identical rows): keep as one
+            halves = []
+            for h in (0, 1):
+                mask = assign == h
+                idx = build_shard_index_vamana(
+                    rows[mask], self.cfg, alpha=self.live.alpha,
+                    backend=self.live.backend, seed=self.cfg.seed,
+                )
+                self.n_distance_computations += idx.n_distance_computations
+                halves.append((
+                    self._ids[s][mask],
+                    np.ascontiguousarray(rows[mask]),
+                    np.asarray(idx.graph, np.int32),
+                ))
+            # shard s becomes half 0; half 1 appends as a new shard
+            (self._ids[s], self._stores[s], self._graphs[s]) = halves[0]
+            self._ids.append(halves[1][0])
+            self._stores.append(halves[1][1])
+            self._graphs.append(halves[1][2])
+            cent = self._centroids.copy()  # COW: snapshots keep theirs
+            cent[s] = cents[0]
+            self._centroids = np.concatenate([cent, cents[1][None, :]])
+            self._entries = np.append(self._entries, 0)
+            dead0 = int(self._tombstones[halves[0][0]].sum())
+            dead1 = int(self._tombstones[halves[1][0]].sum())
+            self._dead_in_shard[s] = dead0
+            self._dead_in_shard = np.append(self._dead_in_shard, dead1)
+            for views in self._quant_views.values():
+                views.append(None)
+            self._touch_shard(s)
+            self._touch_shard(len(self._ids) - 1)
+        reg.counter("live_splits_total",
+                    "shards split by the live layer").inc()
+
+    # ---- internals ------------------------------------------------------
+
+    def _touch_shard(self, s: int) -> None:
+        """A shard's storage changed: refresh its routing centroid and
+        entry point and drop its cached quantized views (identity-keyed
+        device caches invalidate themselves — the storage object is
+        new)."""
+        rows = self._stores[s]
+        if len(rows):
+            cent = self._centroids.copy()  # COW
+            cent[s] = rows.mean(axis=0)
+            self._centroids = cent
+        self._recompute_entry(s)
+        for views in self._quant_views.values():
+            views[s] = None
+
+    def _recompute_entry(self, s: int) -> None:
+        rows = self._stores[s]
+        if len(rows) == 0:
+            self._entries[s] = 0
+            return
+        c = self._centroids[s]
+        if self.metric == "ip":
+            scores = -(rows @ c)
+        else:
+            diff = rows - c[None, :]
+            scores = np.einsum("nd,nd->n", diff, diff)
+        # prefer a live seed: a dead entry still traverses, but a live
+        # one keeps the first hop useful
+        dead = self._tombstones[self._ids[s]]
+        if not dead.all():
+            scores = np.where(dead, np.inf, scores)
+        self._entries[s] = int(np.argmin(scores))

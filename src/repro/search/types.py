@@ -167,11 +167,19 @@ def _to_bf16(x: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class MergedTopology:
-    """Merged global graph + its vectors (ScaleGANN / DiskANN serving)."""
+    """Merged global graph + its vectors (ScaleGANN / DiskANN serving).
+
+    ``tombstones`` ([N] bool, optional) marks deleted vectors (the live
+    mutation layer, ``repro.live``): tombstoned ids still participate in
+    traversal — their rows and edges keep the graph navigable until a
+    consolidation pass physically removes them — but are masked out of the
+    re-rank and the final top-k, so a search can never *return* one.
+    """
 
     data: np.ndarray  # [N, D]
     index: GlobalIndex
     metric: str = "l2"
+    tombstones: np.ndarray | None = None  # [N] bool, True == deleted
     # cached quantized storage views (derived, rebuilt on dataclasses.replace)
     _quant_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False
@@ -210,6 +218,10 @@ class ShardTopology:
     shard_graphs: list  # list of [n_i, R] int32 local graphs
     metric: str = "l2"
     centroids: np.ndarray | None = None  # [n_shards, D] partition centroids
+    # [N] bool, True == deleted (see MergedTopology.tombstones): dead ids
+    # keep their graph rows/edges for navigability but are masked out of
+    # the merged pools and the final top-k
+    tombstones: np.ndarray | None = None
     # cached per-shard entry points (derived, rebuilt on dataclasses.replace)
     _entries: np.ndarray | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False
@@ -373,6 +385,25 @@ def as_topology(index_or_shards, data=None, *, metric: str = "l2") -> Topology:
     )
 
 
+def drop_tombstones(ids: np.ndarray, tombstones: np.ndarray,
+                    k: int) -> np.ndarray:
+    """Filter deleted ids out of beam-ordered candidate rows.
+
+    ``ids`` rows come back from a beam search already sorted ascending by
+    distance, so compacting live entries left (a stable sort on the dead
+    mask) preserves that order without needing the distances — which the
+    merged f32 path may not even have (``need_dists=False`` backends
+    return inf placeholders).  Returns the first ``k`` live ids per row,
+    -1-padded.
+    """
+    ids = np.asarray(ids, np.int64)
+    dead = (ids >= 0) & tombstones[np.maximum(ids, 0)]
+    order = np.argsort(dead, axis=1, kind="stable")  # live first, in order
+    sid = np.take_along_axis(ids, order, axis=1)
+    sdead = np.take_along_axis(dead, order, axis=1)
+    return np.where(sdead, -1, sid)[:, :k]
+
+
 def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
                width: int, n_entries: int, n_iters: int | None = None,
                dtype: str = "f32", rerank: int = DEFAULT_RERANK):
@@ -399,15 +430,24 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
         topo.index.entry_points(n_entries) if n_entries > 1
         else np.asarray([topo.index.medoid])
     )
+    tomb = topo.tombstones
     if dtype == "f32":
+        # with tombstones, widen the request so masking dead candidates
+        # still leaves k live ones (the beam returns rows sorted by
+        # distance, so compaction preserves f32's exact ordering)
+        kq = k if tomb is None else min(rerank * k, width)
         ids, _, stats = beam_fn(
-            topo.data, topo.index.graph, entries, queries, k,
+            topo.data, topo.index.graph, entries, queries, kq,
             width=width, n_iters=n_iters, metric=topo.metric,
         )
+        if tomb is not None:
+            ids = drop_tombstones(ids, tomb, k)
         return ids, stats
     kq = min(rerank * k, width)
     fused = getattr(beam_fn, "fused_merged", None)
-    if fused is not None:
+    if fused is not None and tomb is None:
+        # the fused device dispatch has no tombstone mask — deletes fall
+        # back to the host epilogue below, which masks before re-ranking
         return fused(topo, entries, queries, k, kq, width=width,
                      n_iters=n_iters, dtype=dtype)
     from repro.kernels import ops  # deferred: keep the f32 path jax-free
@@ -418,6 +458,13 @@ def run_merged(beam_fn, topo: MergedTopology, queries, k: int, *,
         width=width, n_iters=n_iters, metric=topo.metric,
         quant=spec if spec is not None else dtype,
     )
+    if tomb is not None:
+        # rerank_exact tolerates -1 candidates (scored at inf, emitted as
+        # -1 pad), so masking here keeps dead ids out of the final top-k
+        cand = np.where(
+            (np.asarray(cand, np.int64) >= 0)
+            & tomb[np.maximum(cand, 0)], -1, cand,
+        )
     ids, _, n_scored = _rerank_exact_timed(
         ops, topo.data, cand, np.asarray(queries, np.float32), k,
         topo.metric,
@@ -746,10 +793,14 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
     n_probe = probes.shape[1]
     entries = topo.shard_entries()
     staged = dtype != "f32"
+    tomb = topo.tombstones
     kq = k  # per-shard pool width (candidates per probed shard)
+    if staged or tomb is not None:
+        # staged dtypes widen for the re-rank epilogue; tombstones widen so
+        # masking dead candidates still leaves k live ones after the merge
+        kq = min(rerank * k, width)
     if staged:
         shard_store = topo.shard_quant(dtype)
-        kq = min(rerank * k, width)
     else:
         f32_store = topo.shard_store()  # cached: stable storage identity
     pool_ids = np.full((nq, n_probe, kq), -1, np.int64)
@@ -781,10 +832,15 @@ def run_split(beam_fn, topo: ShardTopology, queries, k: int, *,
         gids = np.where(local >= 0, ids[np.maximum(local, 0)], -1)
         pool_ids[qrows, slots] = gids
         pool_d[qrows, slots] = np.where(local >= 0, ld, np.inf)
-    merged = rerank_shard_pools(
-        pool_ids.reshape(nq, n_probe * kq),
-        pool_d.reshape(nq, n_probe * kq), kq
-    )
+    flat_ids = pool_ids.reshape(nq, n_probe * kq)
+    flat_d = pool_d.reshape(nq, n_probe * kq)
+    if tomb is not None:
+        dead = (flat_ids >= 0) & tomb[np.maximum(flat_ids, 0)]
+        flat_ids = np.where(dead, -1, flat_ids)
+        flat_d = np.where(dead, np.inf, flat_d)
+    # f32: pool distances are exact, so the merge takes the final top-k
+    # directly; staged: keep kq candidates for the exact re-rank epilogue
+    merged = rerank_shard_pools(flat_ids, flat_d, kq if staged else k)
     if not staged:
         return merged, stats
     # one exact-f32 epilogue per query over the merged quantized top-kq

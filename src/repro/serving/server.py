@@ -56,6 +56,11 @@ _POST_WARM_METRIC = (
     "(mid-traffic retrace risk)",
 )
 
+_GENERATION_METRIC = (
+    "serving_topology_generation",
+    "current served topology generation (bumped by swap_topology)",
+)
+
 
 def bucket_batch_size(m: int, max_batch: int) -> int:
     """Engine-call batch shape for ``m`` real requests: the next power of
@@ -204,6 +209,49 @@ class AnnServer:
         self._worker_task: asyncio.Task | None = None
         self._inflight: list[PendingRequest] = []  # batch popped, unresolved
         self._dim = int(np.asarray(self.topology.data).shape[1])
+        self.topology_generation = 0
+        self.stats.registry.gauge(*_GENERATION_METRIC).set(0)
+
+    # ---- live topology swap ---------------------------------------------
+
+    def swap_topology(self, index_or_shards, *,
+                      data: np.ndarray | None = None) -> int:
+        """Atomically swap the served topology (epoch swap).
+
+        The mutation layer (:class:`repro.live.LiveIndex`) builds the next
+        generation copy-on-write while this server keeps answering on the
+        current one; publishing is a single attribute store — atomic under
+        the GIL — and the worker reads ``self.topology`` exactly once per
+        engine batch (:meth:`_execute`), so every batch sees one
+        consistent generation and in-flight futures resolve against the
+        generation their batch started on.  No request is rejected or
+        replayed across a swap.  Per-shard device caches carry over for
+        every shard the new generation shares storage with (the live
+        layer's snapshots are built for exactly that).
+
+        Returns the new generation number.
+        """
+        topo = as_topology(index_or_shards, data,
+                           metric=self.config.metric or "l2")
+        dim = int(np.asarray(topo.data).shape[1])
+        if dim != self._dim:
+            raise ValueError(
+                f"swapped topology dim {dim} != served dim {self._dim}"
+            )
+        if topo.metric != self.topology.metric:
+            raise ValueError(
+                f"swapped topology metric {topo.metric!r} != served "
+                f"{self.topology.metric!r}"
+            )
+        self.topology = topo  # the swap: one atomic attribute store
+        self.topology_generation += 1
+        self.stats.registry.gauge(*_GENERATION_METRIC).set(
+            self.topology_generation
+        )
+        if self.tracer.enabled:
+            self.tracer.instant("serve.epoch_swap", track="serving",
+                                generation=self.topology_generation)
+        return self.topology_generation
 
     # ---- lifecycle ------------------------------------------------------
 
@@ -446,6 +494,11 @@ class AnnServer:
         """
         cfg = self.config
         clk = self.clock
+        # read the served topology ONCE per batch: swap_topology() may
+        # replace the attribute concurrently (atomic store from the loop
+        # thread), and every engine call in this flush must answer against
+        # one consistent generation
+        topo = self.topology
         # key on the *parsed* nprobe spec so equivalent forms ("auto" vs
         # ("auto", DEFAULT_AUTO_MARGIN), 2 vs np.int64(2)) share one
         # engine call instead of splitting the batch; dtype is already
@@ -474,7 +527,7 @@ class AnnServer:
             t0 = clk()
             with collect_stages() as stages:
                 ids, st = search(
-                    self.topology, queries, cfg.k, backend=cfg.backend,
+                    topo, queries, cfg.k, backend=cfg.backend,
                     width=cfg.width, n_entries=cfg.n_entries, nprobe=nprobe,
                     dtype=dtype, rerank=cfg.rerank,
                 )

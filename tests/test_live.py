@@ -1,0 +1,309 @@
+"""The live mutation layer: recall under churn, tombstone masking,
+copy-on-write generations, epoch-swapped serving, and the satellite
+regressions (degenerate shard builds, exact entry-point counts).
+
+The churn tests follow the acceptance claim's shape: apply a seeded
+insert/delete schedule through :class:`repro.live.LiveIndex` and compare
+the mutated index's recall@10 against a *fresh offline rebuild of the same
+final point set* — the live graph is allowed to differ structurally, but
+not to cost recall.  Tombstone tests assert the hard invariant (a deleted
+id is never returned) across all three engine backends, since all of them
+flow through the shared drivers that do the masking.
+"""
+
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import IndexConfig
+from repro.core.builder import build_scalegann
+from repro.core.merge import GlobalIndex
+from repro.core.vamana import (build_shard_index_vamana,
+                               build_shard_index_vamana_sequential)
+from repro.data.synthetic import exact_ground_truth, make_clustered, recall_at
+from repro.live import LiveConfig, LiveIndex
+from repro.search import search
+from repro.serving import AnnServer, ServingConfig
+
+CFG = IndexConfig(degree=16, build_degree=32, n_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def churned():
+    """One seeded churn run shared by the recall/masking tests: build on
+    600 points, insert 120 more, delete 60 (mixing originals and fresh
+    inserts), consolidate half-way.  Returns the live index, the deleted
+    id set, and the dataset."""
+    rng = np.random.default_rng(11)
+    ds = make_clustered(720, 16, n_queries=48, gt_k=10, seed=3)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data[:600], CFG, algo="vamana"),
+        ds.data[:600], CFG, LiveConfig(backend="numpy"),
+    )
+    li.insert_batch(ds.data[600:])  # global ids line up with dataset rows
+    deleted = np.concatenate([
+        rng.choice(600, 40, replace=False),
+        600 + rng.choice(120, 20, replace=False),
+    ])
+    li.delete_batch(deleted[:30])
+    li.consolidate()  # first wave goes physical
+    li.delete_batch(deleted[30:])  # second wave stays tombstoned
+    return li, set(int(i) for i in deleted), ds
+
+
+def _live_gt(li, deleted, queries, k=10):
+    live = np.asarray(
+        sorted(set(range(li.n_vectors)) - deleted), np.int64
+    )
+    return live[exact_ground_truth(li._data[live], queries, k)]
+
+
+def test_insert_parity_vs_offline_rebuild(churned):
+    """recall@10 of the churned live index stays within 0.02 of a fresh
+    offline build of the same final point set (the acceptance claim)."""
+    li, deleted, ds = churned
+    gt = _live_gt(li, deleted, ds.queries)
+    ids_live, _ = search(li.snapshot(), ds.queries, 10, width=64,
+                         backend="numpy", nprobe=3)
+    live = np.asarray(sorted(set(range(li.n_vectors)) - deleted), np.int64)
+    rebuilt = build_scalegann(li._data[live], CFG, algo="vamana")
+    ids_re, _ = search(rebuilt.shard_topology(li._data[live]), ds.queries,
+                       10, width=64, backend="numpy", nprobe=3)
+    r_live = recall_at(ids_live, gt, 10)
+    r_re = recall_at(live[ids_re], gt, 10)
+    assert r_live >= r_re - 0.02, (r_live, r_re)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("dtype", ["f32", "uint8"])
+def test_tombstoned_never_returned(churned, backend, dtype):
+    """The hard delete invariant, on every backend and distance stage:
+    physically removed ids AND still-resident tombstoned ids never appear
+    in results."""
+    li, deleted, ds = churned
+    assert li.resident_dead > 0  # the mask path is actually exercised
+    snap = li.snapshot()
+    assert snap.tombstones is not None
+    for nprobe in (None, 2):
+        ids, _ = search(snap, ds.queries, 10, width=64, backend=backend,
+                        dtype=dtype, nprobe=nprobe)
+        assert not (set(ids.ravel().tolist()) & deleted)
+
+
+def test_tombstoned_never_returned_merged(churned):
+    """Merged-topology masking (incl. the pallas fused gate falling back
+    to the host epilogue when tombstones are present)."""
+    _, _, ds = churned
+    res = build_scalegann(ds.data, CFG, algo="vamana")
+    topo = res.topology(ds.data)
+    gt1 = exact_ground_truth(ds.data, ds.queries, 1)[:, 0]
+    tomb = np.zeros(len(ds.data), bool)
+    tomb[gt1] = True  # kill each query's true nearest: masking must act
+    t = dataclasses.replace(topo, tombstones=tomb)
+    for backend in ("numpy", "jax", "pallas"):
+        for dtype in ("f32", "uint8"):
+            ids, _ = search(t, ds.queries, 10, width=64, backend=backend,
+                            dtype=dtype)
+            assert not (set(ids.ravel().tolist())
+                        & set(gt1.tolist())), (backend, dtype)
+
+
+def test_consolidate_goes_physical(churned):
+    li, deleted, ds = churned
+    before = li.resident_dead
+    stats = li.consolidate()
+    assert stats["removed"] == before
+    assert li.resident_dead == 0
+    snap = li.snapshot()
+    assert snap.tombstones is None  # fast paths come back
+    assert not (set(np.concatenate(snap.shard_ids).tolist()) & deleted)
+    ids, _ = search(snap, ds.queries, 10, width=64, backend="numpy")
+    gt = _live_gt(li, deleted, ds.queries)
+    assert recall_at(ids, gt, 10) > 0.85
+    assert not (set(ids.ravel().tolist()) & deleted)
+
+
+def test_cow_generations_share_untouched_shards():
+    """A mutation replaces only the mutated shard's arrays; earlier
+    snapshots keep answering on theirs (what keeps identity-keyed device
+    caches warm across epochs)."""
+    ds = make_clustered(400, 8, n_queries=4, gt_k=5, seed=0)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data, CFG, algo="vamana"), ds.data, CFG,
+        LiveConfig(backend="numpy"),
+    )
+    li.prepare("uint8")
+    s0 = li.snapshot()
+    stores0 = s0.shard_store()
+    quant0 = s0.shard_quant("uint8")
+    graphs0 = [g.copy() for g in s0.shard_graphs]
+    # a tight cluster of inserts lands in exactly one shard
+    target = 1
+    pts = li._centroids[target][None, :] + np.random.default_rng(0).normal(
+        0, 1e-3, (5, 8)).astype(np.float32)
+    li.insert_batch(pts)
+    s1 = li.snapshot()
+    touched = [i for i in range(li.n_shards)
+               if s1.shard_store()[i] is not stores0[i]]
+    assert touched == [target]
+    assert [i for i in range(li.n_shards)
+            if s1.shard_quant("uint8")[i][0] is not quant0[i][0]] == [target]
+    # the old snapshot's graphs were never mutated in place
+    for g_old, g_now in zip(graphs0, s0.shard_graphs):
+        np.testing.assert_array_equal(g_old, g_now)
+    # deletes are pure-mask: no shard storage invalidated at all
+    li.delete_batch(np.asarray([0, 1, 2]))
+    s2 = li.snapshot()
+    assert all(a is b for a, b in zip(s1.shard_store(), s2.shard_store()))
+    assert s1.tombstones is None and s2.tombstones is not None
+
+
+def test_shard_split_fires_and_serves():
+    ds = make_clustered(300, 8, n_queries=8, gt_k=5, seed=1)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data, CFG, algo="vamana"), ds.data, CFG,
+        LiveConfig(backend="numpy", split_max=120),
+    )
+    n0 = li.n_shards
+    rng = np.random.default_rng(2)
+    pts = (li._centroids[0][None, :]
+           + rng.normal(0, 0.5, (150, 8))).astype(np.float32)
+    gids = li.insert_batch(pts)
+    assert li.n_shards > n0
+    assert li._centroids.shape[0] == li.n_shards
+    snap = li.snapshot()
+    ids, _ = search(snap, pts[:10], 5, width=32, backend="numpy")
+    hit = sum(g in set(row.tolist()) for g, row in zip(gids[:10], ids))
+    assert hit >= 8  # inserted points are findable after the split
+
+
+def test_epoch_swap_inflight_futures_resolve():
+    """Mid-traffic generation swap: every future submitted before, during,
+    and after the swap resolves (no rejected epochs), post-swap batches
+    see the new generation's inserts and never a tombstoned id."""
+    ds = make_clustered(400, 8, n_queries=1, gt_k=5, seed=4)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data, CFG, algo="vamana"), ds.data, CFG,
+        LiveConfig(backend="numpy"),
+    )
+    rng = np.random.default_rng(5)
+    new_pts = (ds.data[rng.choice(400, 12)]
+               + rng.normal(0, 1e-3, (12, 8))).astype(np.float32)
+    kill = rng.choice(400, 25, replace=False)
+
+    async def main():
+        cfg = ServingConfig(backend="numpy", k=5, width=32, max_batch=8,
+                            max_wait_ms=1.0, pretrace=False)
+        async with AnnServer(li.snapshot(), config=cfg) as srv:
+            assert srv.topology_generation == 0
+            # wave 1: in-flight before the swap
+            futs = [srv.submit_nowait(ds.data[i]) for i in range(30)]
+            await asyncio.sleep(0)  # let some batches flush
+            gids = li.insert_batch(new_pts)
+            li.delete_batch(kill)
+            gen = srv.swap_topology(li.snapshot())
+            assert gen == 1
+            # wave 2: straddles the swap
+            futs += [srv.submit_nowait(q) for q in new_pts]
+            futs += [srv.submit_nowait(ds.data[i]) for i in kill[:10]]
+            results = await asyncio.gather(*futs)
+            assert len(results) == len(futs)  # nothing rejected or hung
+            dead = set(int(i) for i in kill)
+            for q, r in zip(new_pts, results[30:30 + len(new_pts)]):
+                assert r.ids.shape == (5,)
+            # post-swap answers never contain a tombstoned id
+            for r in results[30:]:
+                assert not (set(r.ids.tolist()) & dead)
+            # a post-swap query for an inserted point finds it
+            found = 0
+            for g, q in zip(gids, new_pts):
+                r = await srv.submit(q)
+                found += int(g in set(r.ids.tolist()))
+            assert found >= len(gids) - 1
+            assert srv.stats.registry.gauge(
+                "serving_topology_generation",
+                "current served topology generation "
+                "(bumped by swap_topology)").value == 1
+
+    asyncio.run(main())
+
+
+def test_swap_topology_validates():
+    ds = make_clustered(100, 8, n_queries=1, gt_k=5, seed=0)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data, CFG, algo="vamana"), ds.data, CFG,
+    )
+
+    async def main():
+        cfg = ServingConfig(backend="numpy", k=5, width=32, pretrace=False)
+        async with AnnServer(li.snapshot(), config=cfg) as srv:
+            other = make_clustered(50, 4, n_queries=1, gt_k=1, seed=1)
+            wrong = LiveIndex.from_build(
+                build_scalegann(other.data, CFG, algo="vamana"),
+                other.data, CFG,
+            )
+            with pytest.raises(ValueError, match="dim"):
+                srv.swap_topology(wrong.snapshot())
+            assert srv.topology_generation == 0
+
+    asyncio.run(main())
+
+
+# ---- satellite regressions ----------------------------------------------
+
+
+@pytest.mark.parametrize("build", [build_shard_index_vamana,
+                                   build_shard_index_vamana_sequential])
+@pytest.mark.parametrize("n", [0, 1])
+def test_degenerate_shard_builds(build, n):
+    """n ∈ {0, 1} shards (tombstone consolidation / shard splits produce
+    them) build an edgeless graph instead of crashing on the empty-argmin
+    medoid or the empty-batch np.resize."""
+    vec = np.random.default_rng(0).normal(size=(n, 8)).astype(np.float32)
+    idx = build(vec, CFG)
+    assert idx.graph.shape == (n, min(CFG.degree, 1))
+    assert (idx.graph == -1).all()
+    assert idx.n_distance_computations == 0
+
+
+def test_entry_points_exact_count():
+    """entry_points(n) returns exactly min(n+1, n_vectors) unique seeds
+    even when the medoid collides with a linspace sample (the old path
+    silently shrank the seed set)."""
+    g = np.full((100, 4), -1, np.int32)
+    # medoid 0 collides with linspace's first sample
+    gi = GlobalIndex(graph=g, medoid=0, n_vectors=100)
+    for n in (1, 4, 16, 99, 150):
+        seeds = gi.entry_points(n)
+        assert len(seeds) == min(n + 1, 100), n
+        assert len(np.unique(seeds)) == len(seeds)
+        assert seeds.min() >= 0 and seeds.max() < 100
+        assert 0 in seeds  # the medoid is always a seed
+    # collision mid-range too
+    gi = GlobalIndex(graph=g, medoid=33, n_vectors=100)
+    seeds = gi.entry_points(99)  # linspace(0..99, 99) hits 33's region
+    assert len(seeds) == 100 and 33 in seeds
+    # determinism: two replicas agree
+    np.testing.assert_array_equal(gi.entry_points(16), gi.entry_points(16))
+
+
+def test_insert_empty_and_single_point_shard():
+    """Inserts into a shard emptied by consolidation rebuild it from
+    scratch through the degenerate-guarded offline builder."""
+    ds = make_clustered(200, 8, n_queries=4, gt_k=5, seed=6)
+    li = LiveIndex.from_build(
+        build_scalegann(ds.data, CFG, algo="vamana"), ds.data, CFG,
+        LiveConfig(backend="numpy"),
+    )
+    # wipe shard 0 entirely
+    li.delete_batch(li._ids[0])
+    li.consolidate()
+    assert len(li._ids[0]) == 0
+    # route one point straight at its centroid: lands in the empty shard
+    p = li._centroids[0][None, :].astype(np.float32)
+    gid = li.insert_batch(p)
+    assert len(li._ids[0]) == 1
+    ids, _ = search(li.snapshot(), p, 3, width=32, backend="numpy")
+    assert int(gid[0]) in set(ids.ravel().tolist())
