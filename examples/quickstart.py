@@ -7,7 +7,9 @@ device-resident beam engine (backend="pallas"), 10 preemption-tolerant
 spot-fleet builds (checkpoint/resume through an injected kill), traced
 end-to-end with the telemetry subsystem (README §10 — open the written
 trace at https://ui.perfetto.dev), 11 the live mutable index
-(insert/delete/search under churn with epoch-swapped serving).
+(insert/delete/search under churn with epoch-swapped serving), 12
+crash-consistent durability (WAL + atomic snapshots: kill the process
+mid-mutation, recover, serve identical ids).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -232,6 +234,61 @@ def main():
                   f"{len(outs)}/16 in-flight futures resolved")
 
     asyncio.run(swap_mid_traffic())
+
+    # 12. Crash-consistent durability: from the first save() on, every
+    #     mutation appends a CRC32-framed WAL record *before* touching
+    #     memory, and save() commits checksummed snapshot generations
+    #     atomically (segments -> manifest -> CURRENT flip).  Kill the
+    #     process at any byte boundary -- load() restores the committed
+    #     generation, truncates a torn final WAL record, replays the
+    #     tail, and the recovered index serves ids identical to one
+    #     that never crashed (bench_durability.py CI-guards this across
+    #     backend x dtype; the crash-point table is in README §12).
+    from repro.durability import CrashInjector, SimulatedCrash
+
+    idx_dir = pathlib.Path(tempfile.mkdtemp(prefix="quickstart_idx_"))
+    li.save(idx_dir)                       # snapshot + arms the WAL
+    li.close()                             # detach: li continues purely
+                                           # in memory as the uncrashed
+                                           # reference for the disk copy
+    ops = [("insert", fresh + 0.2), ("delete", new_ids[:4])]
+    for op, arg in ops:                    # the uncrashed reference run
+        (li.insert_batch if op == "insert" else li.delete_batch)(arg)
+    ref_ids, _ = search(li.snapshot(), ds.queries, k=10, backend="jax",
+                        width=96)
+
+    # same mutations against the on-disk copy, with a kill injected
+    # mid-append on the second record (a torn half-frame lands on disk):
+    rec = LiveIndex.load(idx_dir, cfg, LiveConfig(backend="jax"),
+                         injector=CrashInjector(
+                             crash_at={"wal.append.torn": 2}))
+    seq0, pos = rec.wal_seq, 0
+    while pos < len(ops):
+        op, arg = ops[pos]
+        try:
+            (rec.insert_batch if op == "insert" else
+             rec.delete_batch)(arg)
+            pos += 1
+        except SimulatedCrash as c:        # the "kill -9"
+            print(f"[durability] crashed at {c.point}; recovering")
+            rec = LiveIndex.load(idx_dir, cfg, LiveConfig(backend="jax"))
+            pos = rec.wal_seq - seq0       # replayed ops aren't re-run
+
+    async def serve_recovered():
+        sc = ServingConfig(backend="jax", k=10, width=96, max_batch=32,
+                           max_wait_ms=2.0)
+        async with AnnServer(li.snapshot(), config=sc) as srv:
+            srv.swap_topology(rec.snapshot(), reason="recovery")
+            outs = await asyncio.gather(
+                *(srv.submit(q) for q in ds.queries)
+            )
+        served = np.stack([o.ids for o in outs])
+        print(f"[durability] recovered from kill: served ids identical "
+              f"to the uncrashed run: "
+              f"{bool(np.array_equal(served, ref_ids))}")
+
+    asyncio.run(serve_recovered())
+    rec.close()
 
 
 if __name__ == "__main__":

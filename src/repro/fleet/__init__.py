@@ -6,7 +6,10 @@ robustness layer:
 
 * :class:`ShardCheckpoint` / :class:`CheckpointStore` — round-grain
   checkpoints of in-flight ``build_shard_index_vamana`` builds, resumed
-  bit-compatibly (``repro.core.vamana``'s ``round_hook`` / ``resume``);
+  bit-compatibly (``repro.core.vamana``'s ``round_hook`` / ``resume``),
+  stored in a CRC32-checksummed envelope behind fsync'd atomic writes —
+  a corrupt or torn checkpoint is treated as missing (rebuild from
+  round 0), never an executor crash;
 * :class:`PreemptionInjector` / :class:`Preempted` — deterministic
   notice/kill delivery at round boundaries (seeded lifetimes, or explicit
   per-shard kills for tests);
@@ -25,7 +28,11 @@ from repro.core.scheduler import (  # noqa: F401 — one policy namespace
     CostGreedyPolicy,
     DeadlinePolicy,
 )
-from repro.fleet.checkpoint import CheckpointStore, ShardCheckpoint  # noqa: F401
+from repro.fleet.checkpoint import (  # noqa: F401
+    CheckpointCorruptError,
+    CheckpointStore,
+    ShardCheckpoint,
+)
 from repro.fleet.executor import (  # noqa: F401
     FleetBuildResult,
     FleetReport,

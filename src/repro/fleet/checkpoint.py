@@ -10,24 +10,48 @@ that state together with the build parameters it must match on resume;
 to disk) so every resume exercises the same round-trip a real spot fleet
 would — a checkpoint that only survives in process memory proves nothing
 about surviving a preemption.
+
+The serialized form is a checksummed envelope — 4-byte magic plus a
+CRC32 over the npz payload — written tmp → fsync → rename, and a
+corrupt or truncated on-disk checkpoint is **treated as missing** on
+load (the task rebuilds from round 0 and
+``fleet_checkpoint_corrupt_total`` ticks) rather than raising out of
+the executor: on spot capacity a half-written checkpoint is an expected
+preemption residue, not an operator error.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import io
+import os
 import pathlib
+import struct
 import threading
+import zlib
 
 import numpy as np
 
+from repro.telemetry import current_registry
+
 FORMAT_VERSION = 1
+
+_ENVELOPE_MAGIC = b"SCKP"
+_ENVELOPE = struct.Struct("<4sI")  # magic, crc32(payload)
 
 _META_FIELDS = (
     "format_version", "shard", "pass_idx", "next_start",
     "n_distance_computations", "n", "R", "seed", "batch_size",
     "round_idx", "n_rounds_total",
 )
+
+
+class CheckpointCorruptError(ValueError):
+    """The checkpoint envelope failed its magic/CRC/decode check.
+
+    ``CheckpointStore.load`` converts this into "no checkpoint" for
+    on-disk blobs; it only propagates when raised from bytes the caller
+    handed in directly."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,13 +87,34 @@ class ShardCheckpoint:
         np.savez_compressed(
             buf, meta=meta, graph=np.asarray(self.graph, np.int64)
         )
-        return buf.getvalue()
+        payload = buf.getvalue()
+        return _ENVELOPE.pack(
+            _ENVELOPE_MAGIC, zlib.crc32(payload) & 0xFFFFFFFF
+        ) + payload
 
     @staticmethod
     def from_bytes(raw: bytes) -> "ShardCheckpoint":
-        with np.load(io.BytesIO(raw)) as z:
-            meta = z["meta"]
-            graph = z["graph"]
+        if len(raw) < _ENVELOPE.size:
+            raise CheckpointCorruptError(
+                f"checkpoint truncated to {len(raw)} bytes (envelope "
+                f"needs {_ENVELOPE.size})")
+        magic, crc = _ENVELOPE.unpack_from(raw)
+        if magic != _ENVELOPE_MAGIC:
+            raise CheckpointCorruptError(
+                f"bad checkpoint magic {magic!r}")
+        payload = raw[_ENVELOPE.size:]
+        got = zlib.crc32(payload) & 0xFFFFFFFF
+        if got != crc:
+            raise CheckpointCorruptError(
+                f"checkpoint CRC mismatch (envelope says {crc:08x}, "
+                f"payload is {got:08x})")
+        try:
+            with np.load(io.BytesIO(payload)) as z:
+                meta = z["meta"]
+                graph = z["graph"]
+        except Exception as exc:  # CRC passed — still never leak zipfile
+            raise CheckpointCorruptError(
+                f"undecodable checkpoint payload ({exc})") from exc
         fields = dict(zip(_META_FIELDS, (int(v) for v in meta)))
         version = fields.pop("format_version")
         if version != FORMAT_VERSION:
@@ -106,17 +151,36 @@ class CheckpointStore:
         if self.directory:
             path = self.directory / f"shard{ckpt.shard:05d}.ckpt.npz"
             tmp = path.with_suffix(".tmp")
-            tmp.write_bytes(raw)
+            with open(tmp, "wb") as f:
+                f.write(raw)
+                f.flush()
+                os.fsync(f.fileno())  # durable before it can shadow
             tmp.replace(path)  # atomic: a torn write never shadows a good one
+            fd = os.open(self.directory, os.O_RDONLY)
+            try:
+                os.fsync(fd)  # the rename itself must survive power loss
+            finally:
+                os.close(fd)
 
     def load(self, shard: int) -> ShardCheckpoint | None:
         with self._lock:
             raw = self._blobs.get(shard)
-        if raw is None and self.directory:
-            path = self.directory / f"shard{shard:05d}.ckpt.npz"
-            if path.exists():
-                raw = path.read_bytes()
-        return None if raw is None else ShardCheckpoint.from_bytes(raw)
+        if raw is not None:
+            return ShardCheckpoint.from_bytes(raw)
+        if not self.directory:
+            return None
+        path = self.directory / f"shard{shard:05d}.ckpt.npz"
+        if not path.exists():
+            return None
+        try:
+            return ShardCheckpoint.from_bytes(path.read_bytes())
+        except CheckpointCorruptError:
+            # expected spot-preemption residue: rebuild from round 0
+            current_registry().counter(
+                "fleet_checkpoint_corrupt_total",
+                "corrupt/truncated on-disk checkpoints treated as missing",
+            ).inc()
+            return None
 
     def discard(self, shard: int) -> None:
         with self._lock:

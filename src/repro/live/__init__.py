@@ -1,7 +1,9 @@
 """Online mutation layer: batched inserts, tombstone deletes, background
 consolidation, and kmeans shard splits over the shard search engine —
-served through immutable copy-on-write snapshot generations.  See
-:mod:`repro.live.index` for the full design notes.
+served through immutable copy-on-write snapshot generations, made
+crash-consistent by :mod:`repro.durability` (mutation WAL + atomic
+checksummed snapshots via ``LiveIndex.save`` / ``LiveIndex.load``).
+See :mod:`repro.live.index` for the full design notes.
 """
 
 from repro.live.index import LiveConfig, LiveIndex

@@ -40,11 +40,30 @@ fused ``pallas`` backend keys its host→device cache on ``id(storage)``,
 so after a mutation only the mutated shards re-upload — snapshots
 pre-populate ``ShardTopology``'s ``shard_store()`` / ``shard_quant()`` /
 ``shard_entries()`` caches from the live state for exactly that reason.
+
+**Durability.**  :meth:`LiveIndex.save` writes an atomic checksummed
+snapshot (per-shard segments + manifest + ``CURRENT`` pointer flip, see
+:mod:`repro.durability.snapshot`) and rotates in a fresh write-ahead
+log; from the first ``save`` on, every mutation appends a CRC32-framed
+WAL record **before** touching in-memory state.  :meth:`LiveIndex.load`
+restores the committed snapshot and deterministically replays the WAL
+tail past the manifest's high-water mark — mutations are pure functions
+of ``(state, logged args, config seeds)``, so a kill at any byte
+boundary recovers to an index that serves *identical* ids.
+
+**Concurrency.**  Mutations (and ``save``) serialize behind one
+re-entrant writer lock; :meth:`snapshot` takes the same lock, so a
+snapshot cut concurrently with a mutator is always a consistent
+generation — and because generations are immutable COW, *readers* never
+need a lock at all: any number of search threads keep answering on
+previously-cut snapshots while the writer works.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import pathlib
+import threading
 
 import numpy as np
 
@@ -52,6 +71,11 @@ from repro.configs.base import IndexConfig
 from repro.core.partition import split_shard_rows
 from repro.core.vamana import (_apply_reverse_edges, build_shard_index_vamana,
                                robust_prune_batch)
+from repro.durability import (SimulatedCrash, SnapshotCorruptionError,
+                              WalCorruptionError, WriteAheadLog,
+                              load_manifest, save_snapshot)
+from repro.durability.crash import NULL_INJECTOR
+from repro.durability.snapshot import gc_snapshot_dir, load_segment
 from repro.search import ShardTopology
 from repro.search.types import QuantSpec, _to_bf16
 from repro.telemetry import current_registry, current_tracer
@@ -140,6 +164,19 @@ class LiveIndex:
         )
         self.generation = 0
         self.n_distance_computations = 0
+        self._init_mutable_state()
+
+    def _init_mutable_state(self) -> None:
+        # writer lock: insert/delete/consolidate/save/snapshot serialize
+        # here; readers (searches over snapshots) never take it
+        self._mutlock = threading.RLock()
+        # durable-logging state: attached by the first save()/load();
+        # wal_seq counts logged mutations (the manifest's high-water mark
+        # plus the replayed/appended tail)
+        self._wal: WriteAheadLog | None = None
+        self._replaying = False
+        self._fsync_interval = 1
+        self.wal_seq = 0
 
     # ---- constructors ---------------------------------------------------
 
@@ -189,20 +226,26 @@ class LiveIndex:
         live state — so identity-keyed device caches stay warm for
         everything a mutation didn't touch.  The tombstone mask rides
         along only while deleted ids are still resident.
+
+        Safe to call concurrently with readers *and* with a mutating
+        writer: it takes the writer lock, so the cut is always a whole
+        generation, and everything it hands out is immutable COW —
+        readers on earlier snapshots are never disturbed.
         """
-        topo = ShardTopology(
-            data=self._data,
-            shard_ids=list(self._ids),
-            shard_graphs=list(self._graphs),
-            metric=self.metric,
-            centroids=self._centroids,
-            tombstones=self._tombstones if self.resident_dead else None,
-        )
-        topo._store_cache = list(self._stores)
-        topo._entries = self._entries.copy()
-        for dtype in self._quant_views:
-            topo._quant_cache[dtype] = self._quant_list(dtype)
-        return topo
+        with self._mutlock:
+            topo = ShardTopology(
+                data=self._data,
+                shard_ids=list(self._ids),
+                shard_graphs=list(self._graphs),
+                metric=self.metric,
+                centroids=self._centroids,
+                tombstones=self._tombstones if self.resident_dead else None,
+            )
+            topo._store_cache = list(self._stores)
+            topo._entries = self._entries.copy()
+            for dtype in self._quant_views:
+                topo._quant_cache[dtype] = self._quant_list(dtype)
+            return topo
 
     def prepare(self, dtype: str) -> None:
         """Register a staged distance dtype (``"bf16"`` / ``"uint8"``):
@@ -247,8 +290,13 @@ class LiveIndex:
             raise ValueError(
                 f"insert dim {X.shape[1]} != index dim {self._data.shape[1]}"
             )
+        with self._mutlock:
+            return self._insert_batch_locked(X, m)
+
+    def _insert_batch_locked(self, X: np.ndarray, m: int) -> np.ndarray:
         tr = current_tracer()
         reg = current_registry()
+        self._log_mutation("insert", {"vectors": X})
         gids = len(self._data) + np.arange(m, dtype=np.int64)
         with tr.span("live.insert", track="live", n=m):
             if self.metric == "ip":
@@ -342,13 +390,18 @@ class LiveIndex:
         :meth:`consolidate` removes them.
         """
         ids = np.unique(np.asarray(ids, np.int64))
-        if ids.size and (ids[0] < 0 or ids[-1] >= len(self._data)):
-            raise ValueError("delete id out of range")
-        fresh = ids[~self._tombstones[ids]] if ids.size else ids
-        if fresh.size == 0:
-            return 0
+        with self._mutlock:
+            if ids.size and (ids[0] < 0 or ids[-1] >= len(self._data)):
+                raise ValueError("delete id out of range")
+            fresh = ids[~self._tombstones[ids]] if ids.size else ids
+            if fresh.size == 0:
+                return 0
+            return self._delete_batch_locked(fresh)
+
+    def _delete_batch_locked(self, fresh: np.ndarray) -> int:
         tr = current_tracer()
         reg = current_registry()
+        self._log_mutation("delete", {"ids": fresh})
         with tr.span("live.delete", track="live", n=int(fresh.size)):
             tomb = self._tombstones.copy()  # COW: snapshots keep the old mask
             tomb[fresh] = True
@@ -389,8 +442,14 @@ class LiveIndex:
         """
         thr = self.live.consolidate_threshold if threshold is None \
             else threshold
+        with self._mutlock:
+            return self._consolidate_locked(float(thr))
+
+    def _consolidate_locked(self, thr: float) -> dict:
         tr = current_tracer()
         reg = current_registry()
+        self._log_mutation(
+            "consolidate", {"threshold": np.array([thr], np.float64)})
         repruned = removed = shards = 0
         counter = [0]
         with tr.span("live.consolidate", track="live",
@@ -510,6 +569,244 @@ class LiveIndex:
             self._touch_shard(len(self._ids) - 1)
         reg.counter("live_splits_total",
                     "shards split by the live layer").inc()
+
+    # ---- durability: WAL + atomic snapshots ------------------------------
+
+    def _replay_pins(self) -> dict:
+        """The config values WAL replay depends on — pinned into the
+        manifest and verified on load, because replaying under different
+        knobs would deterministically diverge."""
+        return {
+            "degree": int(self.cfg.degree),
+            "build_degree": int(self.cfg.build_degree),
+            "seed": int(self.cfg.seed),
+            "alpha": float(self.live.alpha),
+            "backend": str(self.live.backend),
+            "batch_size": int(self.live.batch_size),
+            "consolidate_threshold": float(
+                self.live.consolidate_threshold),
+        }
+
+    def _log_mutation(self, op: str, arrays: dict) -> None:
+        """Append the mutation to the WAL **before** any in-memory state
+        changes.  No-op until a :meth:`save`/:meth:`load` attaches a
+        log; during replay the sequence counter advances without
+        re-appending."""
+        if self._replaying:
+            self.wal_seq += 1
+            return
+        if self._wal is None:
+            return
+        self._wal.append(self.wal_seq + 1, op, arrays)
+        self.wal_seq += 1
+
+    def save(self, root, *, fsync_interval: int | None = None,
+             injector=None) -> dict:
+        """Commit an atomic checksummed snapshot to ``root`` and rotate
+        in a fresh WAL.
+
+        The first ``save`` is also what arms durable logging: from its
+        return on, every mutation is WAL-framed before it applies.
+        Commit protocol (see :mod:`repro.durability.snapshot`): per-shard
+        ``ids``/``graph`` segments plus one global segment (stores are
+        *not* written — shard rows equal ``data[ids]`` by construction,
+        so load reconstructs them), then the manifest (schema version,
+        per-file CRC32, WAL high-water mark, replay config pins), then
+        the ``CURRENT`` pointer flip — the single commit point.  A crash
+        anywhere before the flip leaves the previous generation and its
+        WAL fully intact.  Returns the committed manifest."""
+        root = pathlib.Path(root)
+        inj = injector if injector is not None else NULL_INJECTOR
+        tr = current_tracer()
+        reg = current_registry()
+        with self._mutlock:
+            if fsync_interval is not None:
+                self._fsync_interval = int(fsync_interval)
+            with tr.span("durability.snapshot_save", track="durability",
+                         n_vectors=self.n_vectors, n_shards=self.n_shards,
+                         wal_seq=self.wal_seq):
+                segments: dict[str, dict] = {
+                    f"shard{s:04d}": {"ids": self._ids[s],
+                                      "graph": self._graphs[s]}
+                    for s in range(len(self._ids))
+                }
+                segments["global"] = {
+                    "data": self._data,
+                    "tombstones": self._tombstones,
+                    "centroids": self._centroids,
+                    "dead_in_shard": self._dead_in_shard,
+                    "entries": self._entries,
+                }
+                meta = {
+                    "metric": self.metric,
+                    "n_shards": self.n_shards,
+                    "n_vectors": self.n_vectors,
+                    "dim": int(self._data.shape[1]),
+                    "split_max": int(self._split_max),
+                    "generation": int(self.generation),
+                    "wal_seq": int(self.wal_seq),
+                    "config": self._replay_pins(),
+                }
+                manifest = save_snapshot(root, segments, meta, injector=inj)
+                # the committed snapshot covers everything up to wal_seq
+                # — rotate in the fresh (empty) log the manifest names;
+                # if the rotate never happens, load treats the missing
+                # file as an empty log, which is exactly right
+                old_wal = self._wal
+                inj.reached("wal.rotate")
+                self._wal = WriteAheadLog(
+                    root / manifest["wal_file"],
+                    fsync_interval=self._fsync_interval, injector=inj)
+                if old_wal is not None:
+                    old_wal.close()
+                gc_snapshot_dir(root, manifest)
+                reg.counter("snapshot_saves_total",
+                            "atomic LiveIndex snapshots committed").inc()
+        return manifest
+
+    @classmethod
+    def load(cls, root, cfg: IndexConfig, live: LiveConfig | None = None,
+             *, fsync_interval: int = 1, injector=None) -> "LiveIndex":
+        """Recover: restore the committed snapshot, replay the WAL tail.
+
+        Resolves ``CURRENT`` → manifest (CRC-verified), restores every
+        segment (CRC + size verified), then opens the manifest's WAL —
+        truncating a torn final record — and replays every record past
+        the manifest's high-water mark.  Replay calls the same mutation
+        methods the original process ran; they are deterministic given
+        identical state + config pins, so the recovered index is
+        bit-identical to the pre-crash one up to the last durable
+        record.  The recovered index keeps logging to the same WAL."""
+        root = pathlib.Path(root)
+        inj = injector if injector is not None else NULL_INJECTOR
+        tr = current_tracer()
+        reg = current_registry()
+        with tr.span("durability.recover", track="durability"):
+            manifest = load_manifest(root)
+            li = cls._from_snapshot(root, manifest, cfg, live)
+            li._fsync_interval = int(fsync_interval)
+            wal = WriteAheadLog(root / manifest["wal_file"],
+                                fsync_interval=int(fsync_interval),
+                                injector=inj)
+            mark = int(manifest["wal_seq"])
+            replayed = 0
+            with tr.span("durability.replay", track="durability",
+                         n_records=len(wal.records), mark=mark):
+                li._replaying = True
+                try:
+                    for rec in wal.records:
+                        if rec.seq <= mark:
+                            continue  # already inside the snapshot
+                        if rec.seq != li.wal_seq + 1:
+                            raise WalCorruptionError(
+                                wal.path, rec.offset,
+                                f"replay gap: state covers seq "
+                                f"{li.wal_seq}, next record is {rec.seq}")
+                        li._apply_record(rec)
+                        replayed += 1
+                        inj.reached("replay.record")
+                except SimulatedCrash:
+                    # recovery is crash-safe: nothing on disk mutated
+                    # (beyond the idempotent torn-tail truncate), so a
+                    # re-load simply replays again from the snapshot
+                    wal.close()
+                    raise
+                finally:
+                    li._replaying = False
+            li._wal = wal
+            reg.counter(
+                "recovery_total",
+                "LiveIndex recoveries (snapshot restore + WAL replay)",
+            ).inc()
+            reg.counter(
+                "recovery_replayed_records_total",
+                "WAL tail records replayed during recovery",
+            ).inc(replayed)
+        return li
+
+    @classmethod
+    def _from_snapshot(cls, root: pathlib.Path, manifest: dict,
+                       cfg: IndexConfig,
+                       live: LiveConfig | None) -> "LiveIndex":
+        live = live or LiveConfig()
+        li = object.__new__(cls)
+        li.cfg = cfg
+        li.live = live
+        pins = li._replay_pins()
+        saved = manifest.get("config", {})
+        diffs = {k: (saved.get(k), v) for k, v in pins.items()
+                 if saved.get(k) != v}
+        if diffs:
+            raise ValueError(
+                "config disagrees with the snapshot manifest — WAL "
+                f"replay would diverge ({{name: (saved, given)}}): {diffs}"
+            )
+        sid = int(manifest["snapshot_id"])
+        gname = f"seg-{sid:06d}-global.npz"
+        g = load_segment(root, manifest, gname)
+        li.metric = str(manifest["metric"])
+        li._data = np.asarray(g["data"], np.float32)
+        want = (int(manifest["n_vectors"]), int(manifest["dim"]))
+        if li._data.shape != want:
+            raise SnapshotCorruptionError(
+                root / gname,
+                f"data shape {li._data.shape} disagrees with manifest "
+                f"{want}")
+        li._tombstones = np.asarray(g["tombstones"], bool)
+        li._centroids = np.asarray(g["centroids"], np.float32)
+        li._dead_in_shard = np.asarray(g["dead_in_shard"], np.int64)
+        li._entries = np.asarray(g["entries"], np.int64)
+        li._ids, li._graphs, li._stores = [], [], []
+        for s in range(int(manifest["n_shards"])):
+            name = f"seg-{sid:06d}-shard{s:04d}.npz"
+            seg = load_segment(root, manifest, name)
+            ids = np.asarray(seg["ids"], np.int64)
+            if ids.size and (ids.min() < 0 or ids.max() >= len(li._data)):
+                raise SnapshotCorruptionError(
+                    root / name,
+                    f"shard {s} ids outside [0, {len(li._data)})")
+            li._ids.append(ids)
+            li._graphs.append(np.asarray(seg["graph"], np.int32))
+            # stores are not persisted: shard rows equal data[ids] by
+            # construction, so reconstruct (halves the snapshot)
+            li._stores.append(np.ascontiguousarray(li._data[ids]))
+        li._quant_views = {}
+        li._split_max = int(manifest["split_max"])
+        li.generation = int(manifest["generation"])
+        li.n_distance_computations = 0
+        li._init_mutable_state()
+        li.wal_seq = int(manifest["wal_seq"])
+        return li
+
+    def _apply_record(self, rec) -> None:
+        if rec.op == "insert":
+            self.insert_batch(rec.arrays["vectors"])
+        elif rec.op == "delete":
+            self.delete_batch(rec.arrays["ids"])
+        elif rec.op == "consolidate":
+            self.consolidate(float(rec.arrays["threshold"][0]))
+        else:  # unreachable: the WAL decoder already rejected the opcode
+            raise ValueError(f"unknown WAL op {rec.op!r}")
+
+    def sync(self) -> None:
+        """Force the group-commit barrier: fsync any WAL records still
+        inside the ``fsync_interval`` window."""
+        with self._mutlock:
+            if self._wal is not None:
+                self._wal.sync()
+
+    def close(self) -> None:
+        """fsync + close + detach the attached WAL (safe without one).
+
+        The index keeps working after ``close()``, but mutations are no
+        longer logged — in-memory only, exactly like an index that was
+        never ``save()``d.  ``save()`` re-arms durability.  Detaching
+        (rather than leaving a closed handle) lets another process open
+        the WAL, e.g. a recovery rehearsal against a live reference."""
+        with self._mutlock:
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
 
     # ---- internals ------------------------------------------------------
 

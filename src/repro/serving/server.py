@@ -215,7 +215,8 @@ class AnnServer:
     # ---- live topology swap ---------------------------------------------
 
     def swap_topology(self, index_or_shards, *,
-                      data: np.ndarray | None = None) -> int:
+                      data: np.ndarray | None = None,
+                      reason: str | None = None) -> int:
         """Atomically swap the served topology (epoch swap).
 
         The mutation layer (:class:`repro.live.LiveIndex`) builds the next
@@ -229,7 +230,11 @@ class AnnServer:
         every shard the new generation shares storage with (the live
         layer's snapshots are built for exactly that).
 
-        Returns the new generation number.
+        ``reason`` labels the swap in metrics and the trace — e.g.
+        ``"churn"`` for routine generation publishes vs ``"recovery"``
+        when the generation came out of ``LiveIndex.load`` after a
+        crash, so a dashboard can tell planned epochs from repaired
+        ones.  Returns the new generation number.
         """
         topo = as_topology(index_or_shards, data,
                            metric=self.config.metric or "l2")
@@ -248,9 +253,14 @@ class AnnServer:
         self.stats.registry.gauge(*_GENERATION_METRIC).set(
             self.topology_generation
         )
+        self.stats.registry.counter(
+            "serving_topology_swaps_total", "epoch swaps served",
+            reason=reason or "unspecified",
+        ).inc()
         if self.tracer.enabled:
             self.tracer.instant("serve.epoch_swap", track="serving",
-                                generation=self.topology_generation)
+                                generation=self.topology_generation,
+                                reason=reason or "unspecified")
         return self.topology_generation
 
     # ---- lifecycle ------------------------------------------------------

@@ -34,14 +34,16 @@ from repro.telemetry.trace import (NULL_TRACER, ManualClock, NullTracer,
                                    Span, Tracer, collect_stages,
                                    current_tracer, record_stage, set_tracer,
                                    stage_active, use_tracer)
-from repro.telemetry.validate import (check_fleet_trace,
+from repro.telemetry.validate import (check_durability_trace,
+                                      check_fleet_trace,
                                       check_serving_trace,
                                       validate_chrome_trace)
 
 __all__ = [
     "Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram", "ManualClock",
     "MetricsRegistry", "NULL_TRACER", "NullTracer", "SignatureGuard",
-    "Span", "Tracer", "check_fleet_trace", "check_serving_trace",
+    "Span", "Tracer", "check_durability_trace", "check_fleet_trace",
+    "check_serving_trace",
     "collect_stages", "current_registry", "current_tracer",
     "install_compile_listener", "parse_prometheus", "record_stage",
     "set_registry", "set_tracer", "stage_active", "use_registry",

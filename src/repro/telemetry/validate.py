@@ -8,17 +8,20 @@ ids; ``i`` instants; ``M`` metadata) — enough that chrome://tracing and
 Perfetto load the file, and enough that a regression in the exporter
 fails CI instead of producing a silently unloadable artifact.
 
-``check_fleet_trace`` / ``check_serving_trace`` are the *semantic*
-checks: the fleet trace must show an injected preemption's kill →
-backoff → resume lifecycle on worker tracks, and the serving trace must
-decompose each sampled request's end-to-end latency into its
-queue/batch/engine/rerank/resolve phases with <5% residual.
+``check_fleet_trace`` / ``check_serving_trace`` /
+``check_durability_trace`` are the *semantic* checks: the fleet trace
+must show an injected preemption's kill → backoff → resume lifecycle on
+worker tracks, the serving trace must decompose each sampled request's
+end-to-end latency into its queue/batch/engine/rerank/resolve phases
+with <5% residual, and the durability trace must show the WAL → crash →
+recover → replay lifecycle the crash-injection bench drives.
 """
 
 from __future__ import annotations
 
 __all__ = [
-    "check_fleet_trace", "check_serving_trace", "validate_chrome_trace",
+    "check_durability_trace", "check_fleet_trace", "check_serving_trace",
+    "validate_chrome_trace",
 ]
 
 _PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C", "s", "t", "f"}
@@ -146,6 +149,57 @@ def check_fleet_trace(obj) -> dict:
     }
     summary["ok"] = bool(
         worker_tids and kill_nested and backoff_after_kill and resume_nested
+    )
+    return summary
+
+
+def check_durability_trace(obj, min_crashes: int = 1) -> dict:
+    """Verify the crash→recover lifecycle renders on the durability track.
+
+    Requirements (matching what the WAL / snapshot / recovery paths emit
+    under a :class:`~repro.durability.CrashInjector`):
+
+    * ≥1 ``durability.wal_append`` span (mutations were logged);
+    * ≥1 ``durability.snapshot_save`` span (a generation was committed);
+    * ≥ ``min_crashes`` ``durability.crash`` instants;
+    * ≥1 ``durability.recover`` span with a ``durability.replay`` span
+      nested inside its time window (recovery actually replayed).
+
+    Returns a summary dict with ``ok`` plus per-condition counts.
+    """
+    appends: list[dict] = []
+    saves: list[dict] = []
+    crashes: list[dict] = []
+    recovers: list[dict] = []
+    replays: list[dict] = []
+    for ev in obj.get("traceEvents", []):
+        name, ph = ev.get("name"), ev.get("ph")
+        if ph == "X":
+            if name == "durability.wal_append":
+                appends.append(ev)
+            elif name == "durability.snapshot_save":
+                saves.append(ev)
+            elif name == "durability.recover":
+                recovers.append(ev)
+            elif name == "durability.replay":
+                replays.append(ev)
+        elif name == "durability.crash":
+            crashes.append(ev)
+    replay_nested = any(
+        any(_contains(rec, rep["ts"]) for rec in recovers)
+        for rep in replays
+    )
+    summary = {
+        "n_wal_appends": len(appends),
+        "n_snapshot_saves": len(saves),
+        "n_crashes": len(crashes),
+        "n_recovers": len(recovers),
+        "n_replays": len(replays),
+        "replay_nested_in_recover": replay_nested,
+    }
+    summary["ok"] = bool(
+        appends and saves and len(crashes) >= min_crashes
+        and recovers and replay_nested
     )
     return summary
 
